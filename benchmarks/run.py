@@ -1,0 +1,50 @@
+"""Benchmark entrypoint: one section per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+
+Prints `name,value,derived` CSV rows per figure, the paper-claim PASS/FAIL
+lines, and (when dry-run artifacts exist) the roofline table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    from benchmarks import paper_experiments as P
+
+    rows, claims = P.run_all()
+    print("name,value,derived")
+    for r in rows:
+        print(r)
+    print()
+    failed = 0
+    for c in claims:
+        print(c)
+        failed += ("FAIL" in c)
+    print(f"\n[bench] {len(rows)} rows, {len(claims)} claims "
+          f"({failed} failed) in {time.time()-t0:.1f}s")
+
+    if not args.skip_roofline:
+        import glob
+        if glob.glob(f"{args.dryrun_dir}/*.json"):
+            print("\n=== roofline (from dry-run artifacts) ===")
+            from benchmarks import roofline
+            roofline.main(["--dryrun-dir", args.dryrun_dir])
+        else:
+            print("\n[bench] no dry-run artifacts; run "
+                  "`python -m repro.launch.dryrun --all` first")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

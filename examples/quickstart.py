@@ -1,0 +1,47 @@
+"""Quickstart: the PUL engine in 60 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Plan a preload schedule analytically (distance, expected utilization).
+2. Run the schedule for real through the Pallas kernel (interpret on CPU,
+   Mosaic DMA on TPU) and check it against the jnp oracle.
+3. Sweep the distance knob on the calibrated DMA twin — the paper's Fig 5.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DMAEngine, HBM, NVM, MICROBLAZE, TPU_V5E_VPU,
+                        PULConfig, plan_stream, speedup)
+from repro.kernels import pul_sum, ref
+
+# -- 1. plan -----------------------------------------------------------
+plan = plan_stream(block_bytes=64 * 128 * 4, flops_per_block=64 * 128,
+                   tier=HBM, pe=TPU_V5E_VPU)
+print(f"planned preload distance d*={plan.cfg.distance} "
+      f"(bound: {plan.bound}, predicted PE utilization "
+      f"{plan.predicted_utilization:.0%})")
+
+# -- 2. run the real kernel against the oracle --------------------------
+data = jax.random.normal(jax.random.PRNGKey(0), (4096, 128), jnp.float32)
+trace = jax.random.randint(jax.random.PRNGKey(1), (256,), 0, 4096, jnp.int32)
+cfg = PULConfig(distance=plan.cfg.distance)
+got = pul_sum(data, trace, cfg=cfg)
+want = ref.sum_ref(data, trace)
+np.testing.assert_allclose(got, want, rtol=1e-5)
+print(f"pul_sum(trace of 256 random rows) = {float(got):.3f}  == oracle ✓")
+
+# -- 3. the paper's distance sweep (Fig 5-A) ----------------------------
+eng = DMAEngine(NVM, MICROBLAZE)
+print("\ndistance sweep on the calibrated NVM twin (paper Fig 5-A):")
+for d in (1, 2, 4, 8, 16, 32):
+    st = eng.run_stream(PULConfig(distance=d), n_blocks=512, block_bytes=64,
+                        compute_flops_per_block=16)
+    bar = "#" * int(st.pe_utilization * 40)
+    print(f"  d={d:2d}  {st.total_time*1e6:7.1f} us  util {bar}")
+s = speedup(eng, PULConfig(distance=16), n_blocks=512, block_bytes=64,
+            compute_flops_per_block=16)
+print(f"\ninterleaved vs phase-separated: {s:.2f}x  (paper: 2.9x on NVM)")

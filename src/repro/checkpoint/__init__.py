@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (
+    CheckpointConfig,
+    CheckpointManager,
+)
+
+__all__ = ["CheckpointConfig", "CheckpointManager"]

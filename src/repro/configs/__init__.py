@@ -1,0 +1,58 @@
+"""Config registry: ``get_config(arch_id)`` + the assigned shape grid."""
+from repro.configs.base import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    InputShape,
+    ModelConfig,
+)
+
+from repro.configs.internvl2_2b import CONFIG as _internvl2_2b
+from repro.configs.musicgen_large import CONFIG as _musicgen_large
+from repro.configs.qwen3_1_7b import CONFIG as _qwen3_1_7b
+from repro.configs.qwen2_5_32b import CONFIG as _qwen2_5_32b
+from repro.configs.gemma2_27b import CONFIG as _gemma2_27b
+from repro.configs.gemma3_12b import CONFIG as _gemma3_12b
+from repro.configs.rwkv6_7b import CONFIG as _rwkv6_7b
+from repro.configs.deepseek_v2_236b import CONFIG as _deepseek_v2_236b
+from repro.configs.grok_1_314b import CONFIG as _grok_1_314b
+from repro.configs.zamba2_7b import CONFIG as _zamba2_7b
+
+CONFIGS = {
+    c.name: c
+    for c in (
+        _internvl2_2b,
+        _musicgen_large,
+        _qwen3_1_7b,
+        _qwen2_5_32b,
+        _gemma2_27b,
+        _gemma3_12b,
+        _rwkv6_7b,
+        _deepseek_v2_236b,
+        _grok_1_314b,
+        _zamba2_7b,
+    )
+}
+
+ARCH_IDS = tuple(CONFIGS)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in CONFIGS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(CONFIGS)}")
+    return CONFIGS[arch]
+
+
+def cells():
+    """All assigned (arch, shape) cells, with applicability flag."""
+    for arch, cfg in CONFIGS.items():
+        for shape in SHAPES.values():
+            yield arch, shape, cfg.shape_applicable(shape)
+
+
+__all__ = [
+    "CONFIGS", "ARCH_IDS", "get_config", "cells", "ModelConfig", "InputShape",
+    "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

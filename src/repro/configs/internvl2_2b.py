@@ -1,0 +1,26 @@
+"""InternVL2-2B — InternLM2-1.8B language backbone + InternViT frontend.
+
+[arXiv:2404.16821; hf]. 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92553. The ViT frontend is a STUB per the assignment: `input_specs()`
+supplies precomputed patch embeddings (B, 256, d_model) that are prepended to
+the token stream (vlm family).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    pattern=("global",),
+    train_accum=2,
+    mlp_type="swiglu",
+    rope_theta=1e6,
+    frontend="vit_stub",
+    frontend_tokens=256,
+)

@@ -1,0 +1,27 @@
+"""Qwen2.5-32B — dense, GQA with QKV bias.
+
+[hf:Qwen/Qwen2.5 family; hf]. 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064, head_dim 128, rope theta 1e6.
+
+Note: 40 heads do not divide the 16-way model axis; the sharding resolver
+replicates the head dim for attention weights (FFN stays 16-way TP) — see
+runtime/sharding.py and the §Perf head-padding discussion.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    pattern=("global",),
+    train_accum=16,
+    mlp_type="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+)

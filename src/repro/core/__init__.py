@@ -1,0 +1,56 @@
+"""PUL core: the paper's contribution as a composable JAX/Pallas layer.
+
+Public API:
+  - PULConfig, IssueStrategy, MemoryTier, PEModel (pul.py)
+  - PreloadStream, UnloadStream, pul_loop, ring_scratch (pipeline.py)
+  - DMAEngine, StreamStats, speedup (dma.py)
+  - plan_stream, optimal_distance, predicted_speedup (planner.py)
+"""
+from repro.core.pul import (
+    DRAM,
+    HBM,
+    MICROBLAZE,
+    NVM,
+    PES,
+    REMOTE_HBM,
+    TIERS,
+    TPU_LANE,
+    TPU_SUBLANE,
+    TPU_V5E_MXU,
+    TPU_V5E_VPU,
+    UPMEM_DPU,
+    Direction,
+    IssueStrategy,
+    MemoryTier,
+    PEModel,
+    PULConfig,
+    TransferRequest,
+)
+from repro.core.pipeline import (
+    VMEM_BUDGET_BYTES,
+    PreloadStream,
+    UnloadStream,
+    pul_loop,
+    pul_streams,
+    ring_scratch,
+)
+from repro.core.dma import DMAEngine, StreamStats, speedup
+from repro.core.planner import (
+    Plan,
+    choose_block_rows,
+    optimal_distance,
+    plan_stream,
+    predicted_speedup,
+    roofline_time,
+)
+
+__all__ = [
+    "PULConfig", "IssueStrategy", "Direction", "MemoryTier", "PEModel",
+    "TransferRequest", "DRAM", "NVM", "HBM", "REMOTE_HBM", "TIERS", "PES",
+    "MICROBLAZE", "UPMEM_DPU", "TPU_V5E_VPU", "TPU_V5E_MXU",
+    "TPU_LANE", "TPU_SUBLANE", "VMEM_BUDGET_BYTES",
+    "PreloadStream", "UnloadStream", "pul_loop", "pul_streams", "ring_scratch",
+    "DMAEngine", "StreamStats", "speedup",
+    "Plan", "plan_stream", "optimal_distance", "choose_block_rows",
+    "predicted_speedup", "roofline_time",
+]

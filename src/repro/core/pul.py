@@ -1,0 +1,182 @@
+"""PUL configuration and request descriptors.
+
+This module defines the *software contract* of the paper's technique:
+
+- :class:`PULConfig` — the tunable knobs the paper exposes (preload distance,
+  transfer/block size, issue strategy, unload distance) plus TPU-specific
+  realization details (number of VMEM slots, semaphore layout).
+- :class:`TransferRequest` — one entry of the DMA engine's FIFO, mirroring the
+  paper's HW-register interface (src addr, dst addr, size) in a form usable
+  both by the Pallas emitter (`core.pipeline`) and the discrete-event model
+  (`core.dma`).
+
+The paper distinguishes *pre-loading* (slow memory -> scratchpad, ahead of
+consumption) from *un-loading* (scratchpad -> slow memory, behind production).
+Both directions share the descriptor type; direction is explicit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Optional, Sequence, Tuple
+
+
+class IssueStrategy(str, enum.Enum):
+    """Issue orderings studied in the paper's Experiment 3 (Fig. 5-D).
+
+    BATCH:      issue the full warm-up window of `distance` requests first,
+                then enter the steady state (paper: "batch-wise execution").
+    SEQUENTIAL: alternate one issue / one compute from the start
+                (paper: "sequential interleaving").
+    The paper finds BATCH >= SEQUENTIAL for I/O throughput below the latency
+    plateau, converging above it; BATCH is therefore the default.
+    """
+
+    BATCH = "batch"
+    SEQUENTIAL = "sequential"
+
+
+class Direction(str, enum.Enum):
+    PRELOAD = "preload"  # slow memory -> scratchpad
+    UNLOAD = "unload"    # scratchpad  -> slow memory
+
+
+# TPU VMEM/VREG native tile for fp32/bf16-class dtypes; transfers should be
+# multiples of this to avoid relayout on the DMA path (the TPU analogue of the
+# paper's "64B cache-line" granularity discussion in Experiment 4).
+TPU_LANE = 128
+TPU_SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class PULConfig:
+    """Knobs of the PUL engine (paper §2, Listing 1).
+
+    Attributes:
+      distance: preload distance `d` — number of blocks requested ahead of
+        consumption. The paper's Exp. 3 plateaus at d≈16 for its latencies;
+        on TPU the planner (`core.planner`) derives d from block latency vs
+        per-block compute time.
+      unload_distance: how many blocks behind production the unload wait
+        trails (0 = synchronous flush, the paper's non-PUL baseline).
+      block_shape: scratchpad-block shape (the paper's configurable transfer
+        size, Exp. 4). Product * dtype.itemsize = bytes per request.
+      strategy: issue ordering (Exp. 3, Fig 5-D).
+      slots: number of scratchpad buffers. Defaults to 2*distance for BATCH
+        (double-buffered batches: the next batch lands while the previous is
+        consumed) and distance+1 for SEQUENTIAL (issue of block i+d starts
+        before block i's slot is free).
+      fifo_depth: capacity of the modeled DMA request queue (the paper's HW
+        FIFO holds 64 requests); the emitter asserts distance <= fifo_depth.
+    """
+
+    distance: int = 4
+    unload_distance: int = 1
+    block_shape: Tuple[int, ...] = (TPU_SUBLANE, TPU_LANE)
+    strategy: IssueStrategy = IssueStrategy.BATCH
+    slots: Optional[int] = None
+    fifo_depth: int = 64
+
+    def __post_init__(self):
+        if self.distance < 1:
+            raise ValueError(f"preload distance must be >= 1, got {self.distance}")
+        if self.distance > self.fifo_depth:
+            raise ValueError(
+                f"distance {self.distance} exceeds DMA FIFO depth {self.fifo_depth} "
+                "(the paper's engine queues at most fifo_depth outstanding requests)"
+            )
+        if self.unload_distance < 0:
+            raise ValueError("unload distance must be >= 0")
+        if self.slots is not None and self.slots < self.distance:
+            raise ValueError(
+                f"slots ({self.slots}) must be >= distance ({self.distance}): "
+                "a block must stay resident until it is consumed"
+            )
+
+    @property
+    def num_slots(self) -> int:
+        if self.slots is not None:
+            return self.slots
+        if self.strategy is IssueStrategy.BATCH:
+            return 2 * self.distance
+        return self.distance + 1
+
+    def transfer_bytes(self, itemsize: int) -> int:
+        return int(math.prod(self.block_shape)) * itemsize
+
+    def replace(self, **kw) -> "PULConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferRequest:
+    """One FIFO entry of the (modeled) DMA engine.
+
+    Mirrors the paper's register interface: physical src, dst, size. `issue_t`
+    is filled in by the discrete-event model; `tag` identifies the logical
+    block for the pipeline emitter.
+    """
+
+    direction: Direction
+    src: int              # abstract address (block index * block bytes)
+    dst: int
+    nbytes: int
+    tag: int = -1
+    issue_t: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryTier:
+    """Latency/bandwidth model of one memory technology (paper Fig. 2).
+
+    Values are per-request latency (seconds) and sustained bandwidth
+    (bytes/second). Defaults below are the tiers used across benchmarks.
+    """
+
+    name: str
+    read_latency: float
+    write_latency: float
+    bandwidth: float
+
+    def transfer_time(self, nbytes: int, direction: Direction) -> float:
+        lat = self.read_latency if direction is Direction.PRELOAD else self.write_latency
+        return lat + nbytes / self.bandwidth
+
+
+# Paper tiers (NDP experiments; §3 Experimental Setup): DRAM vs emulated NVM
+# (350 ns read / 170 ns write), system bandwidth capped at 8 GiB/s.
+DRAM = MemoryTier("dram", read_latency=100e-9, write_latency=100e-9, bandwidth=8 * 2**30)
+NVM = MemoryTier("nvm", read_latency=350e-9, write_latency=170e-9, bandwidth=8 * 2**30)
+# TPU tiers (target hardware of this repo): v5e HBM, and remote HBM reached
+# over one ICI hop (plays the paper's "slower tier" role on real systems).
+HBM = MemoryTier("hbm", read_latency=1.0e-6, write_latency=1.0e-6, bandwidth=819e9)
+REMOTE_HBM = MemoryTier("remote_hbm", read_latency=3.0e-6, write_latency=3.0e-6, bandwidth=50e9)
+
+TIERS = {t.name: t for t in (DRAM, NVM, HBM, REMOTE_HBM)}
+
+
+@dataclasses.dataclass(frozen=True)
+class PEModel:
+    """Compute model of the weak PE (paper: 150 MHz MicroBlaze / 350 MHz DPU).
+
+    `flops_per_cycle` captures scalar in-order issue (1 for the paper's PEs).
+    For the TPU adaptation the per-core VPU/MXU rates are used instead by the
+    planner; this class exists so the DMA simulator can replay the paper's
+    numbers faithfully.
+    """
+
+    name: str
+    clock_hz: float
+    flops_per_cycle: float = 1.0
+
+    def compute_time(self, flops: float) -> float:
+        return flops / (self.clock_hz * self.flops_per_cycle)
+
+
+MICROBLAZE = PEModel("microblaze", 150e6)           # NDP soft-core
+UPMEM_DPU = PEModel("upmem_dpu", 350e6)             # PIM
+TPU_V5E_VPU = PEModel("tpu_v5e_vpu", 940e6, flops_per_cycle=8 * 128 * 4)   # vector unit
+TPU_V5E_MXU = PEModel("tpu_v5e_mxu", 940e6, flops_per_cycle=197e12 / 940e6)
+
+PES = {p.name: p for p in (MICROBLAZE, UPMEM_DPU, TPU_V5E_VPU, TPU_V5E_MXU)}

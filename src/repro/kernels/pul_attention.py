@@ -1,0 +1,122 @@
+"""Flash attention with PUL-streamed KV (causal, GQA, window, softcap).
+
+The TPU-native adaptation of the paper's idea applied to the dominant
+memory-bound op of LM serving/training: query tiles live in VMEM (delivered
+by the standard Pallas pipeline), while the long KV stream — the paper's
+"dataset in slow memory" — is pulled through a distance-d preload ring with
+online-softmax compute interleaved against in-flight DMAs. Sliding-window
+layers simply bound the streamed range (gemma2/3).
+
+Layout: q (B, H, T, hd); k/v (B, K, S, hd); GQA mapping h -> h // (H/K) is
+done by the kv index_map inside the kernel (no host-side repeat).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import PULConfig, PreloadStream, pul_loop, ring_scratch
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_vmem, k_hbm, v_hbm, o_vmem, kbuf, ksems, vbuf, vsems,
+            m_scr, l_scr, acc_scr, *, cfg: PULConfig, bt: int, bs: int,
+            ns: int, S: int, T: int, group: int, scale: float,
+            softcap: Optional[float], window: Optional[int], causal: bool):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    tq = pl.program_id(2)
+    kv_h = h // group
+
+    k_st = PreloadStream(k_hbm, kbuf, ksems,
+                         index_map=lambda t: (b, kv_h, t * bs, 0),
+                         cfg=cfg, n_blocks=ns)
+    v_st = PreloadStream(v_hbm, vbuf, vsems,
+                         index_map=lambda t: (b, kv_h, t * bs, 0),
+                         cfg=cfg, n_blocks=ns)
+
+    m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+    l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+    acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_vmem[0, 0].astype(jnp.float32)                 # (bt, hd)
+    # absolute query positions (queries end-aligned with keys: offset S - T)
+    iq = tq * bt + jax.lax.iota(jnp.int32, bt) + (S - T)
+
+    def body(t, views, carry):
+        kt = views[0][0, 0].astype(jnp.float32)          # (bs, hd)
+        vt = views[1][0, 0].astype(jnp.float32)
+        logits = jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        jk = t * bs + jax.lax.iota(jnp.int32, bs)
+        msk = jk[None, :] < S
+        if causal:
+            msk &= jk[None, :] <= iq[:, None]
+        if window is not None:
+            msk &= jk[None, :] > iq[:, None] - window
+        logits = jnp.where(msk, logits, NEG_INF)
+        bmax = jnp.max(logits, axis=-1, keepdims=True)   # (bt,1)
+        new_m = jnp.maximum(m_scr[...], bmax)
+        corr = jnp.exp(m_scr[...] - new_m)
+        p = jnp.exp(logits - new_m)
+        m_scr[...] = new_m
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p, vt, preferred_element_type=jnp.float32)
+        return carry
+
+    pul_loop(ns, [k_st, v_st], body, 0, cfg)
+    out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+    o_vmem[0, 0] = out.astype(o_vmem.dtype)
+
+
+def pul_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  cfg: PULConfig = PULConfig(), bt: int = 128, bs: int = 128,
+                  causal: bool = True, scale: Optional[float] = None,
+                  softcap: Optional[float] = None,
+                  window: Optional[int] = None,
+                  interpret: bool = True) -> jax.Array:
+    B, H, T, hd = q.shape
+    _, K, S, _ = k.shape
+    assert H % K == 0
+    bt = min(bt, T)
+    bs = min(bs, S)
+    assert T % bt == 0
+    ns = -(-S // bs)
+    if ns * bs != S:
+        # pad the KV stream to whole preload blocks; the in-kernel jk < S
+        # mask discards the tail (DMA may not read out of bounds)
+        pad = ((0, 0), (0, 0), (0, ns * bs - S), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kern = functools.partial(
+        _kernel, cfg=cfg, bt=bt, bs=bs, ns=ns, S=S, T=T, group=H // K,
+        scale=scale, softcap=softcap, window=window, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, T // bt),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bt, hd), lambda b, h, t: (b, h, t, 0)),
+        scratch_shapes=[
+            *ring_scratch(cfg, (1, 1, bs, hd), k.dtype),
+            *ring_scratch(cfg, (1, 1, bs, hd), v.dtype),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; smoke tests and benches see the 1 real CPU device.
+
+Axes:
+  pod   — cross-pod data parallelism (2 pods in the multi-pod dry-run)
+  data  — in-pod data parallelism / FSDP sharding
+  model — tensor/expert parallelism
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Tiny mesh for in-test dry-runs (requires >= n_data*n_model devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    out = 1
+    for v in mesh.shape.values():
+        out *= v
+    return out

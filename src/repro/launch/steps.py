@@ -1,0 +1,146 @@
+"""Jittable step functions + their sharding contracts.
+
+One place defines what runs on the mesh: ``train_step`` (fwd+bwd+AdamW),
+``prefill_step`` and ``decode_step`` (serving). `step_shardings` resolves
+every input's PartitionSpec from logical axes so dryrun/train/serve all agree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import zoo
+from repro.models import module as M
+from repro.optim import OptimizerConfig, adamw_init, adamw_update
+from repro.runtime.sharding import ShardingRules, logical_to_spec
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: OptimizerConfig = OptimizerConfig(),
+                    accum: int = 1):
+    """fwd + bwd + AdamW. ``accum`` > 1 scans microbatches with gradient
+    accumulation: live activation memory shrinks by `accum` at zero
+    communication cost (the memory-roofline knob of §Perf)."""
+    model = zoo.build_model(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+
+            def acc_body(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = grads_of(params, mb)
+                g_sum = jax.tree.map(jnp.add, g_sum, g)
+                return (loss_sum + loss, g_sum), ()
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), g0), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        new_params, new_opt, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: Optional[int] = None):
+    model = zoo.build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = zoo.build_model(cfg)
+
+    def decode_step(params, batch, caches):
+        return model.decode_step(params, batch, caches)
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# sharding contracts
+# --------------------------------------------------------------------------
+def _spec_from_logical_tree(logical_tree, shape_tree, mesh, rules):
+    return jax.tree.map(
+        lambda logical, s: logical_to_spec(logical, s.shape, mesh, rules),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def abstract_state(cfg: ModelConfig):
+    """Abstract (params, opt_state) ShapeDtypeStructs — no allocation."""
+    model = zoo.build_model(cfg)
+    aparams = model.abstract_params()
+    mdt = jnp.bfloat16 if cfg.bf16_moments else jnp.float32
+    opt = {
+        "m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, mdt), aparams),
+        "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, mdt), aparams),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return aparams, opt
+
+
+def state_specs(cfg: ModelConfig, mesh, rules: ShardingRules = ShardingRules()):
+    model = zoo.build_model(cfg)
+    pspecs = M.param_specs(model.params, mesh, rules)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    return pspecs, ospecs
+
+
+SERVE_REPLICATE_LIMIT = 12 * 2**30   # bf16 weights per device after TP
+
+
+def cell_specs(cfg: ModelConfig, shape: InputShape, mesh,
+               rules: Optional[ShardingRules] = None):
+    """Everything dryrun/train/serve need for one (arch x shape) cell:
+    abstract inputs + PartitionSpecs, keyed by the step kind.
+
+    Inference cells replicate weights across the data axes when they fit
+    (TP-only sharding): FSDP-sharded weights would be re-gathered over ICI
+    on EVERY decode step, which made serving collective-bound (§Perf A).
+    Giant models (deepseek, grok) keep FSDP — they don't fit replicated."""
+    if rules is None:
+        rules = ShardingRules()
+        if shape.kind != "train":
+            from repro.models import module as _M
+            model = zoo.build_model(cfg)
+            tp = mesh.shape.get("model", 1)
+            if _M.count_bytes(model.params) / tp <= SERVE_REPLICATE_LIMIT:
+                rules = rules.with_overrides(embed=(None,))
+    ins = zoo.input_specs(cfg, shape)
+    batch_specs = _spec_from_logical_tree(ins["batch_logical"], ins["batch"],
+                                          mesh, rules)
+    out = {"batch": ins["batch"], "batch_specs": batch_specs}
+    if shape.kind == "train":
+        aparams, aopt = abstract_state(cfg)
+        pspecs, ospecs = state_specs(cfg, mesh, rules)
+        out.update(params=aparams, opt=aopt, param_specs=pspecs, opt_specs=ospecs)
+    else:
+        aparams, _ = abstract_state(cfg)
+        pspecs, _ = state_specs(cfg, mesh, rules)
+        out.update(params=aparams, param_specs=pspecs)
+    if shape.kind == "decode":
+        out["caches"] = ins["caches"]
+        out["cache_specs"] = _spec_from_logical_tree(
+            ins["caches_logical"], ins["caches"], mesh, rules)
+    return out

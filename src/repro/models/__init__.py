@@ -1,0 +1,5 @@
+from repro.models.zoo import Model, build_model, input_specs, demo_batch
+from repro.models import module, layers, transformer, moe, mla, ssm
+
+__all__ = ["Model", "build_model", "input_specs", "demo_batch",
+           "module", "layers", "transformer", "moe", "mla", "ssm"]

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts: top-k router + two dispatch backends.
+
+Backends (``config.moe_backend``):
+
+  * ``einsum`` — capacity-based one-hot dispatch/combine einsums over token
+    groups (Switch/MaxText style). Simple and robustly shardable, but the
+    dispatch einsums cost ~2*T*E*C*D extra FLOPs — acceptable for few-expert
+    models (grok-1: E=8, ~5% overhead), ruinous for deepseek-v2 (E=160,
+    ~2x). The roofline's MODEL_FLOPS/HLO_FLOPs ratio exposes this.
+  * ``gather`` — sort-based dispatch: argsort tokens by expert, build an
+    (E, C) slot table, gather rows, batched per-expert GEMMs, scatter-add
+    back. FLOPs-honest (capacity factor only); the default for large E.
+
+Both backends drop tokens beyond capacity C = ceil(T*k/E * capacity_factor)
+(standard dropping MoE); equivalence when nothing drops is property-tested.
+
+Expert weights are sharded over the ``model`` mesh axis (expert parallelism);
+`constrain` nudges XLA to all-to-all the dispatched blocks rather than
+all-gathering expert weights.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import Param
+from repro.models.layers import mlp_params, mlp_apply
+from repro.runtime.sharding import constrain
+
+
+def moe_params(cfg: ModelConfig) -> Dict[str, Any]:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dt = jnp.bfloat16
+    p: Dict[str, Any] = {
+        "router": Param((D, E), ("embed", None), jnp.float32, "fan_in"),
+        "w_gate": Param((E, D, F), ("experts", "embed", "ff"), dt, "fan_in"),
+        "w_up": Param((E, D, F), ("experts", "embed", "ff"), dt, "fan_in"),
+        "w_down": Param((E, F, D), ("experts", "ff", "embed"), dt, "fan_in"),
+    }
+    if cfg.num_shared_experts:
+        import dataclasses
+        shared_cfg = dataclasses.replace(
+            cfg, d_ff=cfg.num_shared_experts * F)
+        p["shared"] = mlp_params(shared_cfg)
+    return p
+
+
+def _route(p, x_flat, cfg: ModelConfig):
+    """Returns (ids (T,k), weights (T,k) fp32, aux_loss)."""
+    k, E = cfg.experts_per_tok, cfg.num_experts
+    logits = (x_flat.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)          # deepseek: softmax->topk
+    if cfg.name.startswith("grok"):                 # grok: topk->softmax
+        top_logits, ids = jax.lax.top_k(logits, k)
+        weights = jax.nn.softmax(top_logits, axis=-1)
+    # load-balance auxiliary (Switch): E * sum_e f_e * P_e
+    T = x_flat.shape[0]
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)       # (T,k,E)
+    f = jnp.sum(onehot, axis=(0, 1)) / jnp.maximum(T * k, 1)
+    P = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * P)
+    return ids, weights, aux
+
+
+def _expert_ffn(p, h, cfg: ModelConfig):
+    """h: (E, C, D) -> (E, C, D), batched per-expert gated FFN."""
+    act = jax.nn.silu if cfg.mlp_type == "swiglu" else (
+        lambda t: jax.nn.gelu(t, approximate=True))
+    g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", act(g) * u, p["w_down"])
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = math.ceil(tokens * cfg.experts_per_tok / cfg.num_experts
+                  * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to sublane multiple
+
+
+# --------------------------------------------------------------------------
+# einsum backend (capacity one-hot, grouped)
+# --------------------------------------------------------------------------
+def _moe_einsum(p, x_flat, cfg: ModelConfig):
+    T, D = x_flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_tok
+    Tg = min(T, 2048)
+    n_groups = -(-T // Tg)
+    pad = n_groups * Tg - T
+    xg = jnp.pad(x_flat, ((0, pad), (0, 0))).reshape(n_groups, Tg, D)
+
+    def group(carry, xt):
+        ids, w, aux = _route(p, xt, cfg)
+        C = _capacity(cfg, Tg)
+        oe = jax.nn.one_hot(ids, E, dtype=jnp.int32)             # (Tg,k,E)
+        # position of each (token, slot) within its expert
+        flat = oe.reshape(Tg * k, E)
+        pos = jnp.cumsum(flat, axis=0) * flat                    # (Tg*k,E)
+        pos_tok = (jnp.sum(pos, axis=-1) - 1).reshape(Tg, k)     # (Tg,k)
+        keep = (pos_tok < C) & (pos_tok >= 0)
+        oc = jax.nn.one_hot(jnp.where(keep, pos_tok, C), C, dtype=x_flat.dtype)
+        oe_f = oe.astype(x_flat.dtype)
+        dispatch = jnp.einsum("tke,tkc->tec", oe_f, oc)          # (Tg,E,C)
+        combine = jnp.einsum("tke,tkc,tk->tec", oe_f, oc, w.astype(x_flat.dtype))
+        h = jnp.einsum("td,tec->ecd", xt, dispatch)
+        h = constrain(h, ("experts", None, None))
+        out = _expert_ffn(p, h, cfg)
+        y = jnp.einsum("ecd,tec->td", out, combine)
+        return carry + aux, y
+
+    aux, yg = jax.lax.scan(group, jnp.float32(0.0), xg)
+    y = yg.reshape(n_groups * Tg, D)[:T]
+    return y, aux / n_groups
+
+
+# --------------------------------------------------------------------------
+# gather backend (sort-based, FLOPs-honest)
+# --------------------------------------------------------------------------
+def _moe_gather(p, x_flat, cfg: ModelConfig):
+    T, D = x_flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_tok
+    C = _capacity(cfg, T)
+    ids, w, aux = _route(p, x_flat, cfg)
+    flat_e = ids.reshape(-1)                                     # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts                         # exclusive
+    rank_sorted = jnp.arange(T * k) - starts[sorted_e]
+    # invert the permutation: rank of each original slot in its expert
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    valid = rank < C
+    # slot table: (E, C) -> originating flat slot (T*k = token*k + kth)
+    table = jnp.full((E, C), T * k, jnp.int32)
+    table = table.at[flat_e, rank].set(jnp.arange(T * k, dtype=jnp.int32),
+                                       mode="drop")
+    tok_of_slot = jnp.minimum(table // k, T - 1)
+    live = table < T * k
+    h = jnp.where(live[..., None], x_flat[tok_of_slot], 0)       # (E,C,D)
+    h = constrain(h, ("experts", None, None))
+    out = _expert_ffn(p, h, cfg)
+    # combine: gather each (token, kth) slot's output and weight it
+    g = out[flat_e.reshape(T, k), jnp.minimum(rank, C - 1).reshape(T, k)]  # (T,k,D)
+    g = jnp.where(valid.reshape(T, k)[..., None], g, 0)
+    y = jnp.einsum("tkd,tk->td", g, w.astype(g.dtype))
+    return y.astype(x_flat.dtype), aux
+
+
+def moe_apply(p, x, *, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    x_flat = x.reshape(B * S, D)
+    if cfg.moe_backend == "einsum":
+        y, aux = _moe_einsum(p, x_flat, cfg)
+    elif cfg.moe_backend == "gather":
+        y, aux = _moe_gather(p, x_flat, cfg)
+    else:
+        raise ValueError(f"unknown moe backend {cfg.moe_backend}")
+    y = y.reshape(B, S, D)
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg=cfg)
+    return y, aux

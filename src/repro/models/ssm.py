@@ -1,0 +1,362 @@
+"""Attention-free mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both come in two mathematically-identical forms:
+  * chunked (train/prefill): scan over chunks of ``cfg.chunk_size`` with
+    dense intra-chunk math — every decay exponent in the factorization is
+    <= 0, so nothing overflows regardless of learned decay magnitudes;
+  * recurrent (decode + test oracle): one step at a time, O(1) state.
+
+RWKV6 recurrence (per head, key-dim N, value-dim N; per-CHANNEL decay):
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T ,   w_t = exp(-exp(w0 + lora(x_t)))
+Mamba2 / SSD (per head, scalar decay a_t = exp(A * dt_t)):
+    h_t = a_t h_{t-1} + (dt_t x_t) B_t^T ;  y_t = C_t . h_t + D x_t
+
+Faithfulness notes (DESIGN.md §5): RWKV6's data-*dependent* token-shift
+(ddlerp) is kept for the decay (its critical use) and static for the r/k/v/g
+mixes; group-norm over heads follows the reference.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm, rms_norm_params
+from repro.models.module import Param
+
+
+def _shift(x, x_prev):
+    """Token shift: returns x_{t-1} along seq; slot 0 filled from x_prev
+    (B,D) carry (zeros at sequence start)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, x_shift, mu):
+    return x + (x_shift - x) * mu
+
+
+# ==========================================================================
+# RWKV6
+# ==========================================================================
+def rwkv_params(cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    H, N = cfg.ssm_heads, cfg.ssm_head_dim
+    dt = jnp.bfloat16
+    lora = 64
+    return {
+        "norm_t": rms_norm_params(D),
+        "norm_c": rms_norm_params(D),
+        # time-mix
+        "mu_r": Param((D,), ("embed",), jnp.float32, "normal", 0.2),
+        "mu_k": Param((D,), ("embed",), jnp.float32, "normal", 0.2),
+        "mu_v": Param((D,), ("embed",), jnp.float32, "normal", 0.2),
+        "mu_w": Param((D,), ("embed",), jnp.float32, "normal", 0.2),
+        "mu_g": Param((D,), ("embed",), jnp.float32, "normal", 0.2),
+        "wr": Param((D, H * N), ("embed", "dinner"), dt, "fan_in"),
+        "wk": Param((D, H * N), ("embed", "dinner"), dt, "fan_in"),
+        "wv": Param((D, H * N), ("embed", "dinner"), dt, "fan_in"),
+        "wg": Param((D, H * N), ("embed", "dinner"), dt, "fan_in"),
+        "w0": Param((H, N), ("state", "head_dim"), jnp.float32, "normal", 0.5),
+        "wd_a": Param((D, 64), ("embed", "lora"), dt, "fan_in"),
+        "wd_b": Param((64, H * N), ("lora", "dinner"), dt, "fan_in"),
+        "u": Param((H, N), ("state", "head_dim"), jnp.float32, "normal", 0.5),
+        "ln_scale": Param((H, N), ("state", "head_dim"), jnp.float32, "zeros"),
+        "ln_bias": Param((H, N), ("state", "head_dim"), jnp.float32, "zeros"),
+        "wo": Param((H * N, D), ("dinner", "embed"), dt, "fan_in"),
+        # channel-mix
+        "cmu_k": Param((D,), ("embed",), jnp.float32, "normal", 0.2),
+        "cmu_r": Param((D,), ("embed",), jnp.float32, "normal", 0.2),
+        "cw_k": Param((D, cfg.d_ff), ("embed", "ff"), dt, "fan_in"),
+        "cw_v": Param((cfg.d_ff, D), ("ff", "embed"), dt, "fan_in"),
+        "cw_r": Param((D, D), ("embed", "act_embed"), dt, "fan_in"),
+    }
+
+
+def _rwkv_chunk(r, k, v, logw, u, S0):
+    """One chunk, all heads. r,k,v,logw: (B,C,H,N) fp32; u: (H,N);
+    S0: (B,H,N,N). Returns (out (B,C,H,N), S_C)."""
+    B, C, H, N = r.shape
+    L = jnp.cumsum(logw, axis=1)                        # L_t, t=1..C  (<=0)
+    L_prev = L - logw                                   # L_{t-1}
+    # intra-chunk, strictly causal: decay exp(L_{t-1} - L_j) for j <= t-1
+    dec = L_prev[:, :, None] - L[:, None, :]            # (B,C,C,H,N): t,j
+    tri = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])[None, :, :, None, None]
+    dec = jnp.where(tri, dec, -jnp.inf)                 # mask j >= t
+    scores = jnp.einsum("bthn,bjhn,btjhn->bhtj", r, k, jnp.exp(dec))
+    diag = jnp.einsum("bthn,hn,bthn->bth", r, u, k)     # u-bonus at j=t
+    out = jnp.einsum("bhtj,bjhn->bthn", scores, v)
+    out = out + jnp.einsum("bth,bthn->bthn", diag, v)
+    # inter-chunk: r_t decayed to chunk start, applied to S0
+    out = out + jnp.einsum("bthn,bhnm->bthm", r * jnp.exp(L_prev), S0)
+    # state update: S_C = diag(exp(L_C)) S0 + sum_j (k_j exp(L_C - L_j)) v_j
+    k_dec = k * jnp.exp(L[:, -1:, :, :] - L)
+    S = jnp.exp(L[:, -1])[..., None] * S0 + jnp.einsum("bjhn,bjhm->bhnm", k_dec, v)
+    return out, S
+
+
+def rwkv_wkv_chunked(r, k, v, logw, u, S0, chunk: int):
+    """(B,S,H,N) inputs -> (out (B,S,H,N), S_final). Exact chunked scan.
+
+    Non-multiple sequence lengths are padded with identity steps (k=0,
+    logw=0 => state untouched) and sliced back."""
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zp(r), zp(k), zp(v), zp(logw)
+        out, S_final = rwkv_wkv_chunked(r, k, v, logw, u, S0, chunk)
+        return out[:, :S], S_final
+    n = S // C
+
+    def to_chunks(t):
+        return t.reshape(B, n, C, H, N).swapaxes(0, 1)  # (n,B,C,H,N)
+
+    rs, ks, vs, ws = map(to_chunks, (r, k, v, logw))
+
+    def body(Sc, inp):
+        rc, kc, vc, wc = inp
+        out, Sc = _rwkv_chunk(rc, kc, vc, wc, u, Sc)
+        return Sc, out
+
+    S_final, outs = jax.lax.scan(body, S0, (rs, ks, vs, ws))
+    return outs.swapaxes(0, 1).reshape(B, S, H, N), S_final
+
+
+def rwkv_wkv_recurrent(r, k, v, logw, u, S0):
+    """Step-by-step oracle (and decode path when S==1)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp                            # (B,H,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S) + \
+              jnp.einsum("bhn,hn,bhn,bhm->bhm", rt, u, kt, vt)
+        S = jnp.exp(wt)[..., None] * S + jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        return S, out
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, logw))   # (S,B,H,N)
+    S_final, outs = jax.lax.scan(step, S0, xs)
+    return outs.swapaxes(0, 1), S_final
+
+
+def _rwkv_time_mix(p, x, *, cfg: ModelConfig, state, kind: str):
+    B, S, D = x.shape
+    H, N = cfg.ssm_heads, cfg.ssm_head_dim
+    x_prev = state["x_tm"] if state is not None else jnp.zeros((B, D), x.dtype)
+    xs = _shift(x, x_prev)
+    f32 = jnp.float32
+    xr = _lerp(x, xs, p["mu_r"].astype(x.dtype))
+    xk = _lerp(x, xs, p["mu_k"].astype(x.dtype))
+    xv = _lerp(x, xs, p["mu_v"].astype(x.dtype))
+    xw = _lerp(x, xs, p["mu_w"].astype(x.dtype))
+    xg = _lerp(x, xs, p["mu_g"].astype(x.dtype))
+    r = (xr @ p["wr"]).reshape(B, S, H, N).astype(f32)
+    k = (xk @ p["wk"]).reshape(B, S, H, N).astype(f32)
+    v = (xv @ p["wv"]).reshape(B, S, H, N).astype(f32)
+    g = jax.nn.silu(xg @ p["wg"]).reshape(B, S, H, N)
+    dd = (jnp.tanh(xw @ p["wd_a"]) @ p["wd_b"]).reshape(B, S, H, N).astype(f32)
+    logw = -jnp.exp(p["w0"][None, None] + dd)           # < 0
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, N, N), f32)
+    if kind == "decode":
+        out, S_new = rwkv_wkv_recurrent(r, k, v, logw, p["u"], S0)
+    else:
+        out, S_new = rwkv_wkv_chunked(r, k, v, logw, p["u"], S0, cfg.chunk_size)
+    # per-head group norm
+    mean = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = out * (1.0 + p["ln_scale"]) + p["ln_bias"]
+    y = (out.astype(x.dtype) * g).reshape(B, S, H * N) @ p["wo"]
+    new_state = None
+    if kind in ("decode", "prefill"):
+        new_state = {"S": S_new, "x_tm": x[:, -1, :]}
+    return y, new_state
+
+
+def _rwkv_channel_mix(p, x, *, cfg: ModelConfig, state, kind: str):
+    B, S, D = x.shape
+    x_prev = state["x_cm"] if state is not None else jnp.zeros((B, D), x.dtype)
+    xs = _shift(x, x_prev)
+    xk = _lerp(x, xs, p["cmu_k"].astype(x.dtype))
+    xr = _lerp(x, xs, p["cmu_r"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
+    y = jax.nn.sigmoid(xr @ p["cw_r"]) * (kk @ p["cw_v"])
+    new_state = {"x_cm": x[:, -1, :]} if kind in ("decode", "prefill") else None
+    return y, new_state
+
+
+def rwkv_block_apply(p, x, *, cfg: ModelConfig, kind: str,
+                     state: Optional[Dict[str, Any]] = None):
+    """Full RWKV block: time-mix + channel-mix sublayers with own norms."""
+    tm_state = None if state is None else {"S": state["S"], "x_tm": state["x_tm"]}
+    h, tm_new = _rwkv_time_mix(p, rms_norm(x, p["norm_t"], cfg.norm_eps),
+                               cfg=cfg, state=tm_state, kind=kind)
+    x = x + h
+    cm_state = None if state is None else {"x_cm": state["x_cm"]}
+    h, cm_new = _rwkv_channel_mix(p, rms_norm(x, p["norm_c"], cfg.norm_eps),
+                                  cfg=cfg, state=cm_state, kind=kind)
+    x = x + h
+    new_state = None
+    if kind in ("decode", "prefill"):
+        new_state = {**tm_new, **cm_new}
+    return x, new_state
+
+
+def rwkv_state_spec(cfg: ModelConfig, batch: int):
+    H, N, D = cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_model
+    return {
+        "S": jax.ShapeDtypeStruct((batch, H, N, N), jnp.float32),
+        "x_tm": jax.ShapeDtypeStruct((batch, D), jnp.bfloat16),
+        "x_cm": jax.ShapeDtypeStruct((batch, D), jnp.bfloat16),
+    }
+
+
+def rwkv_state_logical():
+    return {
+        "S": ("cache_batch", "act_heads", None, None),
+        "x_tm": ("cache_batch", None),
+        "x_cm": ("cache_batch", None),
+    }
+
+
+# ==========================================================================
+# Mamba2 (SSD)
+# ==========================================================================
+def mamba_params(cfg: ModelConfig) -> Dict[str, Any]:
+    D, din = cfg.d_model, cfg.d_inner
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = din // H
+    K = cfg.conv_kernel
+    dt = jnp.bfloat16
+    conv_ch = din + 2 * N
+    return {
+        "norm": rms_norm_params(D),
+        "in_proj": Param((D, 2 * din + 2 * N + H), ("embed", "dinner"), dt, "fan_in"),
+        "conv_w": Param((K, conv_ch), ("conv", "dinner"), dt, "normal", 0.2),
+        "conv_b": Param((conv_ch,), ("dinner",), dt, "zeros"),
+        "A_log": Param((H,), ("state",), jnp.float32, "normal", 0.5),
+        "D_skip": Param((H,), ("state",), jnp.float32, "ones"),
+        "dt_bias": Param((H,), ("state",), jnp.float32, "zeros"),
+        "gn_scale": Param((din,), ("dinner",), jnp.float32, "zeros"),
+        "out_proj": Param((din, D), ("dinner", "embed"), dt, "fan_in"),
+    }
+
+
+def _ssd_chunk(x, B_, C_, la, dt_, S0):
+    """x: (B,C,H,P) dt-scaled inputs; B_,C_: (B,C,N); la: (B,C,H) log-decay
+    cumsum-able; dt_: (B,C,H); S0: (B,H,P,N). h read AFTER update (j<=t)."""
+    Bb, C, H, P = x.shape
+    L = jnp.cumsum(la, axis=1)                           # (B,C,H), <=0
+    dec = L[:, :, None, :] - L[:, None, :, :]            # (B,t,j,H)
+    tri = (jnp.arange(C)[:, None] >= jnp.arange(C)[None, :])[None, :, :, None]
+    dec = jnp.where(tri, dec, -jnp.inf)
+    cb = jnp.einsum("btn,bjn->btj", C_, B_)              # (B,t,j)
+    scores = cb[..., None] * jnp.exp(dec)                # (B,t,j,H)
+    out = jnp.einsum("btjh,bjh,bjhp->bthp", scores, dt_, x)
+    out = out + jnp.einsum("btn,bth,bhpn->bthp", C_, jnp.exp(L), S0)
+    k_dec = dt_ * jnp.exp(L[:, -1:, :] - L)              # (B,j,H)
+    S = jnp.exp(L[:, -1])[..., None, None] * S0 + \
+        jnp.einsum("bjh,bjhp,bjn->bhpn", k_dec, x, B_)
+    return out, S
+
+
+def mamba_ssd_chunked(x, B_, C_, la, dt_, S0, chunk: int):
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        out, S_final = mamba_ssd_chunked(zp(x), zp(B_), zp(C_), zp(la),
+                                         zp(dt_), S0, chunk)
+        return out[:, :S], S_final
+    n = S // C
+
+    def ck(t, feat):
+        return t.reshape(Bb, n, C, *feat).swapaxes(0, 1)
+
+    xs, bs, cs = ck(x, (H, P)), ck(B_, (N,)), ck(C_, (N,))
+    las, dts = ck(la, (H,)), ck(dt_, (H,))
+
+    def body(Sc, inp):
+        xc, bc, cc, lac, dtc = inp
+        out, Sc = _ssd_chunk(xc, bc, cc, lac, dtc, Sc)
+        return Sc, out
+
+    S_final, outs = jax.lax.scan(body, S0, (xs, bs, cs, las, dts))
+    return outs.swapaxes(0, 1).reshape(Bb, S, H, P), S_final
+
+
+def mamba_ssd_recurrent(x, B_, C_, la, dt_, S0):
+    def step(S, inp):
+        xt, bt, ct, lat, dtt = inp
+        S = jnp.exp(lat)[..., None, None] * S + \
+            jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        out = jnp.einsum("bn,bhpn->bhp", ct, S)
+        return S, out
+
+    xs = (x.swapaxes(0, 1), B_.swapaxes(0, 1), C_.swapaxes(0, 1),
+          la.swapaxes(0, 1), dt_.swapaxes(0, 1))
+    S_final, outs = jax.lax.scan(step, S0, xs)
+    return outs.swapaxes(0, 1), S_final
+
+
+def _depthwise_conv(xbc, w, b, conv_state):
+    """Causal depthwise conv1d, kernel K. xbc: (B,S,Ch); w: (K,Ch);
+    conv_state: (B,K-1,Ch) trailing context (zeros at start)."""
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(full[:, i : full.shape[1] - (K - 1 - i), :] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):, :]
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba_block_apply(p, x, *, cfg: ModelConfig, kind: str,
+                      state: Optional[Dict[str, Any]] = None):
+    B, S, D = x.shape
+    din, H, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = din // H
+    K = cfg.conv_kernel
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * N]
+    dt_raw = zxbcdt[..., 2 * din + 2 * N :]
+    conv_state = (state["conv"] if state is not None
+                  else jnp.zeros((B, K - 1, din + 2 * N), x.dtype))
+    xbc, conv_new = _depthwise_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xin = xbc[..., :din].reshape(B, S, H, P).astype(jnp.float32)
+    B_ = xbc[..., din : din + N].astype(jnp.float32)
+    C_ = xbc[..., din + N :].astype(jnp.float32)
+    dt_ = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    la = -jnp.exp(p["A_log"])[None, None, :] * dt_       # log decay, < 0
+    S0 = state["h"] if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    if kind == "decode":
+        out, S_new = mamba_ssd_recurrent(xin, B_, C_, la, dt_, S0)
+    else:
+        out, S_new = mamba_ssd_chunked(xin, B_, C_, la, dt_, S0, cfg.chunk_size)
+    out = out + p["D_skip"][None, None, :, None] * xin
+    out = out.reshape(B, S, din).astype(x.dtype) * jax.nn.silu(z)
+    out = rms_norm(out, p["gn_scale"], cfg.norm_eps)
+    y = out @ p["out_proj"]
+    new_state = None
+    if kind in ("decode", "prefill"):
+        new_state = {"h": S_new, "conv": conv_new.astype(jnp.bfloat16)}
+    return x + y, new_state
+
+
+def mamba_state_spec(cfg: ModelConfig, batch: int):
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = cfg.d_inner // H
+    K = cfg.conv_kernel
+    return {
+        "h": jax.ShapeDtypeStruct((batch, H, P, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, cfg.d_inner + 2 * N), jnp.bfloat16),
+    }
+
+
+def mamba_state_logical():
+    return {"h": ("cache_batch", "act_heads", None, None),
+            "conv": ("cache_batch", None, "dinner")}

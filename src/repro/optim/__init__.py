@@ -1,0 +1,11 @@
+from repro.optim.optimizer import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim import compression
+
+__all__ = ["OptimizerConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "compression"]

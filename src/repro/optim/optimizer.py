@@ -1,0 +1,89 @@
+"""AdamW with sharded fp32 moments, global-norm clipping, cosine schedule.
+
+Memory policy (large-scale posture): parameters live in bf16, Adam moments in
+fp32, updates computed in fp32 then cast — 10 bytes/param total, which is
+what lets grok-1-314B fit 256 chips (see DESIGN.md §4). Moment tensors
+inherit the parameter PartitionSpecs (ZeRO-3: optimizer state is sharded
+exactly like its parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(grads, state, params, cfg: OptimizerConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        mdt = m.dtype                      # fp32 or bf16 (giant models)
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay (skip 1-d tensors: norms/biases)
+        if p.ndim > 1:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m.astype(mdt), v.astype(mdt)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr, "step": step}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

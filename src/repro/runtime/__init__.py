@@ -1,0 +1,11 @@
+from repro.runtime.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_to_spec,
+    spec_tree,
+    sharding_tree,
+)
+__all__ = [
+    "DEFAULT_RULES", "ShardingRules", "logical_to_spec", "spec_tree",
+    "sharding_tree",
+]

@@ -1,0 +1,3 @@
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+__all__ = ["EngineConfig", "Request", "ServingEngine"]

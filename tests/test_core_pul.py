@@ -1,0 +1,151 @@
+"""Unit + property tests for the PUL core (config, DMA model, planner)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DMAEngine,
+    DRAM,
+    IssueStrategy,
+    MICROBLAZE,
+    NVM,
+    PULConfig,
+    optimal_distance,
+    plan_stream,
+    predicted_speedup,
+    speedup,
+)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        PULConfig(distance=0)
+    with pytest.raises(ValueError):
+        PULConfig(distance=65)          # exceeds the paper's 64-deep FIFO
+    with pytest.raises(ValueError):
+        PULConfig(distance=4, slots=2)  # block must stay resident
+    assert PULConfig(distance=4).num_slots == 8          # batch: 2d
+    assert PULConfig(distance=4,
+                     strategy=IssueStrategy.SEQUENTIAL).num_slots == 5
+
+
+def _stream_kwargs(**over):
+    kw = dict(n_blocks=256, block_bytes=64, compute_flops_per_block=16)
+    kw.update(over)
+    return kw
+
+
+def test_distance_improves_then_plateaus():
+    """Paper Fig 5-A: time falls with distance, then plateaus."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    times = [eng.run_stream(PULConfig(distance=d), **_stream_kwargs()).total_time
+             for d in (1, 2, 4, 8, 16, 32)]
+    assert times[0] > times[-1]
+    for a, b in zip(times, times[1:]):
+        assert b <= a * 1.001           # monotone (within epsilon)
+    assert times[-2] <= times[-1] * 1.01  # plateau: d16 ~ d32
+
+
+def test_plateau_matches_planner():
+    """The sim's plateau is at the planner's analytic d*."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    plan = plan_stream(block_bytes=64, flops_per_block=16, tier=NVM,
+                       pe=MICROBLAZE)
+    d_star = plan.cfg.distance
+    t_star = eng.run_stream(PULConfig(distance=d_star), **_stream_kwargs()).total_time
+    t_deep = eng.run_stream(PULConfig(distance=min(64, 4 * d_star)),
+                            **_stream_kwargs()).total_time
+    assert t_star <= t_deep * 1.15      # no more than 15% off the deep-queue time
+
+
+def test_interleave_speedup_positive_and_nvm_beats_dram():
+    """Paper Exp 1: speedup > 1; higher-latency NVM gains more."""
+    s_nvm = speedup(DMAEngine(NVM, MICROBLAZE), PULConfig(distance=16),
+                    **_stream_kwargs())
+    s_dram = speedup(DMAEngine(DRAM, MICROBLAZE), PULConfig(distance=16),
+                     **_stream_kwargs())
+    assert s_nvm > 1.5
+    assert s_dram > 1.2
+    assert s_nvm > s_dram
+
+
+def test_batch_no_worse_than_sequential_below_plateau():
+    """Paper Fig 5-D."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    for d in (2, 4, 8):
+        tb = eng.run_stream(PULConfig(distance=d, strategy=IssueStrategy.BATCH),
+                            **_stream_kwargs()).total_time
+        ts = eng.run_stream(
+            PULConfig(distance=d, strategy=IssueStrategy.SEQUENTIAL),
+            **_stream_kwargs()).total_time
+        assert tb <= ts * 1.02
+
+
+def test_unload_interleaving_beats_sync_flush():
+    """Paper Exp 5: async unload vs synchronous flush."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    kw = _stream_kwargs(unload_bytes_per_block=64)
+    t_async = eng.run_stream(PULConfig(distance=8, unload_distance=1), **kw).total_time
+    t_sync = eng.run_stream(PULConfig(distance=8, unload_distance=0), **kw).total_time
+    assert t_async < t_sync
+
+
+def test_multi_pe_bandwidth_saturation():
+    """Paper Exp 4/Fig 6: aggregate bandwidth caps scaling."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    single = eng.run_stream(PULConfig(distance=16), **_stream_kwargs())
+    s1 = eng.scale_to_pes(single, 1)
+    s14 = eng.scale_to_pes(single, 14)
+    assert s14.total_time >= s1.total_time          # dilation only grows
+    assert s14.io_throughput <= NVM.bandwidth * 1.01
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    d=st.integers(1, 64),
+    block=st.sampled_from([64, 256, 1024, 4096]),
+    flops=st.integers(1, 10_000),
+)
+def test_pipelining_never_hurts(d, block, flops):
+    """Interleaved execution is never slower than phase-separated (the
+    paper's core claim, as an invariant over the knob space)."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    kw = dict(n_blocks=64, block_bytes=block, compute_flops_per_block=flops)
+    assert speedup(eng, PULConfig(distance=d), **kw) >= 0.999
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    block=st.sampled_from([64, 512, 4096]),
+    flops=st.integers(1, 100_000),
+)
+def test_planner_distance_optimal_within_tolerance(block, flops):
+    """Simulated time at d* is within 10% of the best over all distances."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    kw = dict(n_blocks=128, block_bytes=block, compute_flops_per_block=flops)
+    plan = plan_stream(block_bytes=block, flops_per_block=flops, tier=NVM,
+                       pe=MICROBLAZE)
+    t_star = eng.run_stream(PULConfig(distance=plan.cfg.distance), **kw).total_time
+    t_best = min(eng.run_stream(PULConfig(distance=d), **kw).total_time
+                 for d in (1, 2, 4, 8, 16, 32, 64))
+    assert t_star <= t_best * 1.10
+
+
+def test_predicted_speedup_orders_tiers():
+    s_nvm = predicted_speedup(block_bytes=64, flops_per_block=16,
+                              tier=NVM, pe=MICROBLAZE)
+    s_dram = predicted_speedup(block_bytes=64, flops_per_block=16,
+                               tier=DRAM, pe=MICROBLAZE)
+    assert s_nvm > s_dram > 1.0
+
+
+def test_fifo_backpressure():
+    """A distance > fifo_depth is rejected; at depth the PE stalls but the
+    schedule stays correct (completion count == n_blocks)."""
+    eng = DMAEngine(NVM, MICROBLAZE, fifo_depth=4)
+    st_ = eng.run_stream(PULConfig(distance=4, fifo_depth=4),
+                         **_stream_kwargs(n_blocks=32))
+    assert st_.total_time > 0
+    with pytest.raises(ValueError):
+        PULConfig(distance=8, fifo_depth=4)

@@ -1,0 +1,156 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IssueStrategy, PULConfig
+from repro.kernels import (
+    pul_attention,
+    pul_filter,
+    pul_gather,
+    pul_matmul,
+    pul_sum,
+    ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------- sum
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("distance,strategy", [
+    (1, IssueStrategy.BATCH), (4, IssueStrategy.BATCH),
+    (3, IssueStrategy.SEQUENTIAL), (16, IssueStrategy.BATCH)])
+@pytest.mark.parametrize("rows_per_req", [1, 4])
+def test_pul_sum(dtype, distance, strategy, rows_per_req):
+    R, W, n = 32, 128, 18
+    data = _rand(KEY, (R * rows_per_req, W), dtype)
+    trace = jax.random.randint(jax.random.PRNGKey(1), (n,), 0, R, jnp.int32)
+    cfg = PULConfig(distance=distance, strategy=strategy)
+    got = pul_sum(data, trace, cfg=cfg, rows_per_req=rows_per_req)
+    rows = jnp.concatenate([jnp.arange(rows_per_req) + t * rows_per_req
+                            for t in trace])
+    want = ref.sum_ref(data, rows)
+    np.testing.assert_allclose(got, want, rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+# ------------------------------------------------------------------ gather
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("distance", [1, 2, 8])
+def test_pul_gather(dtype, distance):
+    R, W, n = 64, 256, 40
+    if dtype == jnp.int32:
+        table = jax.random.randint(KEY, (R, W), -100, 100, jnp.int32)
+    else:
+        table = _rand(KEY, (R, W), dtype)
+    trace = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, R, jnp.int32)
+    got = pul_gather(table, trace, cfg=PULConfig(distance=distance))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.gather_ref(table, trace)))
+
+
+# ------------------------------------------------------------------ matmul
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("shape,blocks", [
+    ((128, 128, 128), (64, 64, 64)),
+    ((128, 256, 384), (64, 128, 128)),
+    ((64, 512, 128), (64, 64, 128)),
+])
+@pytest.mark.parametrize("distance", [1, 3])
+def test_pul_matmul(dtype, rtol, shape, blocks, distance):
+    M, K, N = shape
+    bm, bk, bn = blocks
+    a = _rand(KEY, (M, K), dtype)
+    b = _rand(jax.random.PRNGKey(3), (K, N), dtype)
+    got = pul_matmul(a, b, cfg=PULConfig(distance=distance), bm=bm, bk=bk, bn=bn)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=rtol * 10)
+
+
+# --------------------------------------------------------------- attention
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("gqa", [1, 4])
+@pytest.mark.parametrize("softcap,window", [(None, None), (8.0, None), (None, 24)])
+def test_pul_attention(dtype, tol, gqa, softcap, window):
+    B, K, T, S, hd = 2, 2, 64, 64, 32
+    H = K * gqa
+    q = _rand(KEY, (B, H, T, hd), dtype) * 0.3
+    k = _rand(jax.random.PRNGKey(4), (B, K, S, hd), dtype) * 0.3
+    v = _rand(jax.random.PRNGKey(5), (B, K, S, hd), dtype)
+    got = pul_attention(q, k, v, cfg=PULConfig(distance=2), bt=32, bs=16,
+                        softcap=softcap, window=window)
+    want = ref.attention_ref(q, k, v, softcap=softcap, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_pul_attention_uneven_kv_tail():
+    """S not a multiple of bs exercises the in-kernel tail mask."""
+    B, H, T, S, hd = 1, 2, 32, 48, 16
+    q = _rand(KEY, (B, H, T, hd), jnp.float32) * 0.5
+    k = _rand(jax.random.PRNGKey(6), (B, H, S, hd), jnp.float32) * 0.5
+    v = _rand(jax.random.PRNGKey(7), (B, H, S, hd), jnp.float32)
+    got = pul_attention(q, k, v, bt=32, bs=32)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# ------------------------------------------------------------------ filter
+@pytest.mark.parametrize("materialize", [False, True])
+@pytest.mark.parametrize("distance", [2, 8])
+def test_pul_filter(materialize, distance):
+    N, W = 512, 64
+    data = _rand(KEY, (N, W), jnp.float32)
+    got = pul_filter(data, 0.25, cfg=PULConfig(distance=distance),
+                     rows_per_block=128, materialize=materialize)
+    if materialize:
+        want = ref.filter_materialize_ref(data, 0.25)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        want = ref.filter_ref(data, 0.25)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------- property sweep
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    rows=st.integers(8, 64),
+    d=st.integers(1, 8),
+    seq=st.booleans(),
+)
+def test_gather_roundtrip_property(n, rows, d, seq):
+    """gather(table, trace) == table[trace] for arbitrary traces/knobs."""
+    table = jax.random.normal(jax.random.PRNGKey(n), (rows, 128), jnp.float32)
+    trace = jax.random.randint(jax.random.PRNGKey(n + 1), (n,), 0, rows, jnp.int32)
+    cfg = PULConfig(distance=d, strategy=(IssueStrategy.SEQUENTIAL if seq
+                                          else IssueStrategy.BATCH))
+    got = pul_gather(table, trace, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(table[trace]))
+
+
+# ---------------------------------------------------------- decode attention
+@pytest.mark.parametrize("gqa", [1, 4])
+@pytest.mark.parametrize("distance", [1, 4])
+@pytest.mark.parametrize("softcap", [None, 10.0])
+def test_pul_decode_attention(gqa, distance, softcap):
+    from repro.kernels import pul_decode_attention
+    B, K, S, hd = 2, 2, 96, 32
+    H = K * gqa
+    q = _rand(KEY, (B, H, hd), jnp.float32) * 0.4
+    k = _rand(jax.random.PRNGKey(8), (B, K, S, hd), jnp.float32) * 0.4
+    v = _rand(jax.random.PRNGKey(9), (B, K, S, hd), jnp.float32)
+    length = jnp.asarray([S, S // 2], jnp.int32)     # one full, one partial
+    got = pul_decode_attention(q, k, v, length, cfg=PULConfig(distance=distance),
+                               bs=32, softcap=softcap)
+    want = ref.decode_attention_ref(q, k, v, length, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

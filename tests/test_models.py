@@ -1,0 +1,233 @@
+"""Model zoo: per-arch smoke tests, decode parity, layer-math oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, SHAPES, get_config
+from repro.models import build_model, demo_batch, input_specs
+from repro.models import layers as L
+from repro.models import module as M
+from repro.models import ssm as SSM
+
+ARCHS = sorted(CONFIGS)
+
+
+# ------------------------------------------------------------- arch smoke
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_smoke_train_step(arch):
+    """Reduced config: one forward/loss on CPU; shapes + no NaNs."""
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = demo_batch(cfg, 2, 16)
+    loss = jax.jit(m.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+    # random-init loss should be ~ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_grads_finite(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = demo_batch(cfg, 2, 8)
+    grads = jax.jit(jax.grad(m.loss))(params, batch)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_parity(arch):
+    """prefill + step-by-step decode == full forward logits."""
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S, n_dec = 2, 12, 3
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
+                                cfg.vocab_size, jnp.int32)
+    Tf = cfg.frontend_tokens if cfg.frontend else 0
+    fe = None
+    if Tf:
+        fe = (jax.random.normal(jax.random.PRNGKey(3), (B, Tf, cfg.d_model))
+              .astype(jnp.bfloat16) * 0.02)
+
+    def full(toks):
+        b = {"tokens": toks}
+        if fe is not None:
+            b["frontend_embeds"] = fe
+        return m.prefill(params, b)[0]
+
+    S0 = S - n_dec
+    b0 = {"tokens": tokens[:, :S0]}
+    if fe is not None:
+        b0["frontend_embeds"] = fe
+    logits, caches = m.prefill(params, b0, max_seq=S + Tf)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full(tokens[:, :S0])),
+                               atol=1e-3)
+    for t in range(S0, S):
+        pos0 = jnp.full((B,), t + Tf, jnp.int32)
+        logits, caches = m.decode_step(
+            params, {"tokens": tokens[:, t:t + 1], "pos0": pos0}, caches)
+        want = full(tokens[:, :t + 1])
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                                   atol=0.05)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if not cfg.shape_applicable(shape):
+            continue
+        spec = input_specs(cfg, shape)
+        assert "batch" in spec and "batch_logical" in spec
+        flat_b = jax.tree.leaves(spec["batch"])
+        assert all(hasattr(x, "shape") for x in flat_b)
+        if shape.kind == "decode":
+            assert "caches" in spec
+
+
+# ----------------------------------------------------------- layer oracles
+def test_chunked_attend_matches_dense():
+    B, H, T, hd = 2, 4, 256, 32
+    K = 2
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, K, hd)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, K, hd))
+    mask = L._causal_mask(T, T, offset=0, window=None)
+    dense = L._attend(q, k, v, mask=mask, softcap=None, scale=0.2)
+    chunked = L._attend_chunked(q, k, v, softcap=None, scale=0.2, window=None,
+                                kv_block=64)
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(chunked, np.float32), atol=2e-3)
+
+
+def test_chunked_attend_window_softcap():
+    B, H, T, hd = 1, 2, 128, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hd)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hd))
+    mask = L._causal_mask(T, T, offset=0, window=32)
+    dense = L._attend(q, k, v, mask=mask, softcap=20.0, scale=0.25)
+    chunked = L._attend_chunked(q, k, v, softcap=20.0, scale=0.25, window=32,
+                                kv_block=48)  # non-dividing block
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(chunked, np.float32), atol=2e-3)
+
+
+def test_chunked_xent_matches_dense():
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              vocab_chunk=48, vocab_size=200)
+    Vp = cfg.padded_vocab          # 240: table rows are padded by contract
+    emb = {"table": jax.random.normal(jax.random.PRNGKey(0), (Vp, 64))
+           .astype(jnp.bfloat16) * 0.3}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64)).astype(jnp.bfloat16)
+    tgt = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 200, jnp.int32)
+    mask = jnp.ones((2, 16), jnp.float32)
+    got = L.chunked_xent(emb, x, tgt, mask, cfg=cfg)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        emb["table"][:200]).astype(jnp.float32)
+    want = jnp.mean(-jax.nn.log_softmax(logits)[
+        jnp.arange(2)[:, None], jnp.arange(16)[None], tgt])
+    np.testing.assert_allclose(float(got), float(want), rtol=2e-3)
+
+
+def test_rwkv_chunked_matches_recurrent():
+    B, S, H, N = 2, 64, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) * 0.5)
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    S0 = jnp.zeros((B, H, N, N))
+    for chunk in (8, 16, 64):
+        oc, sc = SSM.rwkv_wkv_chunked(r, k, v, logw, u, S0, chunk)
+        orr, sr = SSM.rwkv_wkv_recurrent(r, k, v, logw, u, S0)
+        np.testing.assert_allclose(np.asarray(oc), np.asarray(orr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(sr),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_chunked_nonmultiple_seq():
+    B, S, H, N = 1, 23, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, N)) for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) * 0.3)
+    u = jax.random.normal(ks[4], (H, N))
+    S0 = jnp.zeros((B, H, N, N))
+    oc, sc = SSM.rwkv_wkv_chunked(r, k, v, logw, u, S0, 8)
+    orr, sr = SSM.rwkv_wkv_recurrent(r, k, v, logw, u, S0)
+    np.testing.assert_allclose(np.asarray(oc), np.asarray(orr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sr), atol=1e-4)
+
+
+def test_mamba_chunked_matches_recurrent():
+    B, S, H, P, N = 2, 48, 3, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    B_ = jax.random.normal(ks[1], (B, S, N))
+    C_ = jax.random.normal(ks[2], (B, S, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    la = -jnp.exp(jax.random.normal(ks[4], (B, S, H)) * 0.3) * dt
+    S0 = jnp.zeros((B, H, P, N))
+    oc, sc = SSM.mamba_ssd_chunked(x, B_, C_, la, dt, S0, 16)
+    orr, sr = SSM.mamba_ssd_recurrent(x, B_, C_, la, dt, S0)
+    np.testing.assert_allclose(np.asarray(oc), np.asarray(orr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_local_ring_cache_equals_window_attention():
+    """gemma-style: decoding with a ring cache == full attention with the
+    sliding-window mask."""
+    cfg = get_config("gemma2-27b").reduced()
+    assert cfg.sliding_window == 16
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 40   # long enough that the ring wraps (40 > 16)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0,
+                                cfg.vocab_size, jnp.int32)
+    logits_full = m.prefill(params, {"tokens": tokens})[0]
+    _, caches = m.prefill(params, {"tokens": tokens[:, :S - 1]}, max_seq=S)
+    logits_dec, _ = m.decode_step(
+        params, {"tokens": tokens[:, S - 1:], "pos0": jnp.full((B,), S - 1,
+                                                               jnp.int32)},
+        caches)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full), atol=0.05)
+
+
+def test_moe_einsum_vs_gather_equivalence():
+    """Both dispatch backends agree when capacity drops nothing."""
+    import dataclasses as dc
+    from repro.models import moe as MOE
+    cfg = dc.replace(get_config("grok-1-314b").reduced(),
+                     capacity_factor=8.0)  # no drops
+    p = M.init_tree(jax.random.PRNGKey(0), MOE.moe_params(cfg))
+    x = (jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+         .astype(jnp.bfloat16) * 0.5)
+    y1, _ = MOE.moe_apply(p, x, cfg=dc.replace(cfg, moe_backend="einsum"))
+    y2, _ = MOE.moe_apply(p, x, cfg=dc.replace(cfg, moe_backend="gather"))
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=2e-2)
+
+
+def test_param_counts_full_configs():
+    """Full-size param counts are in the advertised ballpark."""
+    # zamba2 lands at 4.7B from the assignment's dims (the HF 7.4B variant
+    # has wider mamba internals than the spec'd ssm_state=64 / d_ff=14336)
+    expected = {"qwen2.5-32b": (31e9, 36e9), "deepseek-v2-236b": (220e9, 250e9),
+                "grok-1-314b": (290e9, 335e9), "rwkv6-7b": (6e9, 9e9),
+                "gemma2-27b": (25e9, 30e9), "zamba2-7b": (4e9, 9e9),
+                "gemma3-12b": (10.5e9, 14e9)}
+    for arch, (lo, hi) in expected.items():
+        n = build_model(get_config(arch)).num_params()
+        assert lo < n < hi, f"{arch}: {n:,} params not in [{lo:,}, {hi:,}]"
