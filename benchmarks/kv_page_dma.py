@@ -1,0 +1,69 @@
+"""KV-page DMA benchmark: the paged serving design on the discrete-event twin.
+
+  PYTHONPATH=src python benchmarks/kv_page_dma.py [--tier remote_hbm]
+      [--pe tpu_v5e_vpu] [--page-tokens 16] [--kv-features 128] [--gqa 4]
+
+Sweeps the page-restore preload distance on `core.dma`'s KV-page workload
+and reports, per distance: modeled restore throughput, PE utilization, and
+the fraction of page access latency hidden. The planner's d* row is marked —
+at steady state it should hide >=90% of the restore latency (the paper's
+claim transplanted to KV paging; tests/test_dma_invariants.py asserts it).
+"""
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+
+from repro.core import (
+    DMAEngine,
+    KVPageWorkload,
+    PES,
+    TIERS,
+    kv_page_latency_hidden,
+    plan_kv_page_stream,
+    run_kv_page_workload,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", default="remote_hbm", choices=sorted(TIERS))
+    ap.add_argument("--pe", default="tpu_v5e_vpu", choices=sorted(PES))
+    ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--kv-features", type=int, default=128)
+    ap.add_argument("--gqa", type=int, default=4)
+    ap.add_argument("--pages-per-step", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=256)
+    args = ap.parse_args()
+
+    tier, pe = TIERS[args.tier], PES[args.pe]
+    P, F = args.page_tokens, args.kv_features
+    plan = plan_kv_page_stream(page_tokens=P, kv_features=F, tier=tier,
+                               pe=pe, gqa_group=args.gqa)
+    wl = KVPageWorkload(page_bytes=P * F * 2,
+                        flops_per_page=4.0 * P * F * args.gqa,
+                        pages_per_step=args.pages_per_step, steps=args.steps)
+    print(f"KV pages: {P} tok x {F} feat = {wl.page_bytes} B;"
+          f" tier={tier.name} pe={pe.name} gqa={args.gqa}")
+    print(f"planner: d*={plan.cfg.distance} ({plan.bound}-bound, predicted "
+          f"{plan.predicted_utilization:.0%} PE utilization)\n")
+    print(f"{'d':>4} {'time(us)':>10} {'GB/s':>8} {'PE util':>8} "
+          f"{'latency hidden':>15}")
+    sweep = sorted({1, 2, 4, 8, 16, 32, 64, plan.cfg.distance})
+    for d in sweep:
+        stats = run_kv_page_workload(DMAEngine(tier, pe), wl, distance=d)
+        hidden = kv_page_latency_hidden(DMAEngine(tier, pe), wl, distance=d)
+        mark = "  <- d*" if d == plan.cfg.distance else ""
+        print(f"{d:>4} {stats.total_time*1e6:>10.1f} "
+              f"{stats.io_throughput/1e9:>8.2f} "
+              f"{stats.pe_utilization:>7.0%} {hidden:>14.0%}{mark}")
+    base = run_kv_page_workload(DMAEngine(tier, pe), wl,
+                                distance=plan.cfg.distance, interleave=False)
+    star = run_kv_page_workload(DMAEngine(tier, pe), wl,
+                                distance=plan.cfg.distance)
+    print(f"\ninterleaved vs phase-separated at d*: "
+          f"{base.total_time / star.total_time:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

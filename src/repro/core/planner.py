@@ -105,6 +105,49 @@ def choose_block_rows(
     return max(1, rows)
 
 
+def kv_page_bytes(page_tokens: int, kv_features: int, itemsize: int = 2) -> int:
+    """Bytes of one KV page: `page_tokens` tokens x `kv_features` packed
+    per-token KV features (every attention layer's K and V concatenated —
+    the paged engine's page layout) x bf16 by default."""
+    return page_tokens * kv_features * itemsize
+
+
+def kv_page_flops(page_tokens: int, kv_features: int, gqa_group: int = 1) -> float:
+    """Decode-attention compute consuming one KV page in one step.
+
+    Per query head group the scores (q . k^T) and the weighted sum (p . v)
+    each do ~2 MACs per cached feature; all `gqa_group` query heads of a KV
+    group ride the same page transfer (PUL's amortized transfer size), so
+    compute scales with the group while bytes don't."""
+    return 4.0 * page_tokens * kv_features * gqa_group
+
+
+def plan_kv_page_stream(
+    *,
+    page_tokens: int,
+    kv_features: int,
+    tier: MemoryTier,
+    pe: PEModel,
+    gqa_group: int = 1,
+    itemsize: int = 2,
+    fifo_depth: int = 64,
+    strategy: IssueStrategy = IssueStrategy.BATCH,
+) -> Plan:
+    """Plan the page-restore preload stream of the paged-KV serving engine.
+
+    The unit block is one KV page; d* = ceil(T_io / T_c) is the number of
+    pages the engine requests ahead of the attention step consuming them —
+    the paper's preload distance applied to KV paging."""
+    return plan_stream(
+        block_bytes=kv_page_bytes(page_tokens, kv_features, itemsize),
+        flops_per_block=kv_page_flops(page_tokens, kv_features, gqa_group),
+        tier=tier,
+        pe=pe,
+        fifo_depth=fifo_depth,
+        strategy=strategy,
+    )
+
+
 def roofline_time(flops: float, bytes_moved: float, tier: MemoryTier, pe: PEModel) -> float:
     """Ideal (perfectly overlapped) execution time — the roofline itself."""
     return max(pe.compute_time(flops), bytes_moved / tier.bandwidth)

@@ -78,6 +78,99 @@ def _kernel(q_vmem, k_hbm, v_hbm, o_vmem, kbuf, ksems, vbuf, vsems,
     o_vmem[0, 0] = out.astype(o_vmem.dtype)
 
 
+def _paged_decode_kernel(pt_smem, len_smem, q_vmem, k_hbm, v_hbm, o_vmem,
+                         kbuf, ksems, vbuf, vsems, *, cfg: PULConfig,
+                         P: int, n_pages: int, scale: float,
+                         softcap: Optional[float]):
+    b = pl.program_id(0)
+    kv_h = pl.program_id(1)
+    length = len_smem[b]
+
+    # the page table IS the preload trace: block t of the stream is whatever
+    # physical page the slot's logical page t maps to (random access in slow
+    # memory, sequential consumption in the ring — the paper's Exp. 2 trace)
+    k_st = PreloadStream(k_hbm, kbuf, ksems,
+                         index_map=lambda t: (pt_smem[b, t], kv_h, 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+    v_st = PreloadStream(v_hbm, vbuf, vsems,
+                         index_map=lambda t: (pt_smem[b, t], kv_h, 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+
+    q = q_vmem[0, 0].astype(jnp.float32)                 # (G, hd)
+
+    def body(t, views, carry):
+        m, l, acc = carry
+        kt = views[0][0, 0].astype(jnp.float32)          # (P, hd)
+        vt = views[1][0, 0].astype(jnp.float32)
+        logits = jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        jk = t * P + jax.lax.iota(jnp.int32, P)
+        logits = jnp.where((jk < length)[None, :], logits, NEG_INF)
+        bmax = jnp.max(logits, axis=-1, keepdims=True)
+        new_m = jnp.maximum(m, bmax)
+        corr = jnp.exp(m - new_m)
+        p = jnp.exp(logits - new_m)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.dot(p, vt, preferred_element_type=jnp.float32)
+        return new_m, l, acc
+
+    G, hd = q.shape
+    init = (jnp.full((G, 1), NEG_INF, jnp.float32),
+            jnp.zeros((G, 1), jnp.float32),
+            jnp.zeros((G, hd), jnp.float32))
+    m, l, acc = pul_loop(n_pages, [k_st, v_st], body, init, cfg)
+    o_vmem[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_vmem.dtype)
+
+
+def pul_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, page_tables: jax.Array,
+                               lengths, *, cfg: PULConfig = PULConfig(),
+                               scale: Optional[float] = None,
+                               softcap: Optional[float] = None,
+                               interpret: bool = True) -> jax.Array:
+    """Decode attention straight over a paged KV store (serving hot path).
+
+    q: (B, H, hd) one query token per slot; k_pages/v_pages: (NP, K, P, hd)
+    physical page frames (P tokens per page); page_tables: (B, n_pages)
+    int32 physical page id of each slot's logical page; lengths: (B,) valid
+    tokens per slot. Returns (B, H, hd).
+
+    The kernel never materializes a contiguous KV view: pages stream from
+    slow memory through a distance-d preload ring, addressed by the SMEM
+    page table — software paging *is* the trace-driven preload of the paper.
+    """
+    B, H, hd = q.shape
+    NP, K, P, _ = k_pages.shape
+    _, n_pages = page_tables.shape
+    assert H % K == 0
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+    qg = q.reshape(B, K, G, hd)
+    kern = functools.partial(_paged_decode_kernel, cfg=cfg, P=P,
+                             n_pages=n_pages, scale=scale, softcap=softcap)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, K),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+        scratch_shapes=[
+            *ring_scratch(cfg, (1, 1, P, hd), k_pages.dtype),
+            *ring_scratch(cfg, (1, 1, P, hd), v_pages.dtype),
+        ],
+        interpret=interpret,
+    )(page_tables.astype(jnp.int32), lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, hd)
+
+
 def pul_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   cfg: PULConfig = PULConfig(), bt: int = 128, bs: int = 128,
                   causal: bool = True, scale: Optional[float] = None,

@@ -14,6 +14,14 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Version-compat mesh context: `jax.set_mesh` landed after 0.4.37;
+    on older jax the Mesh object itself is the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

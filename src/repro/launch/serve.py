@@ -1,7 +1,13 @@
-"""Serving launcher: batched engine over any zoo architecture.
+"""Serving launcher: paged, PUL-tiered continuous batching over the zoo.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --requests 8 --max-new 12
+      --requests 8 --max-new 12 --page-tokens 8 --slots 4
+
+`--dense` falls back to the monolithic-cache reference engine. Page-pool
+knobs: --page-tokens (page size), --hot-pages (fast-tier frames; 0 = fit
+everything), --distance (preload distance for page restores; 0 = planner
+d*). A per-tick metrics line reports tokens/s, page faults, shared-prefix
+hits, and the modeled fraction of restore latency the preload plan hides.
 """
 from __future__ import annotations
 
@@ -9,10 +15,17 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import zoo
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (
+    EngineConfig,
+    PagedEngineConfig,
+    PagedServingEngine,
+    Request,
+    ServingEngine,
+)
 
 
 def main(argv=None):
@@ -23,6 +36,15 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--dense", action="store_true",
+                    help="use the dense-cache reference engine")
+    ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--hot-pages", type=int, default=0)
+    ap.add_argument("--distance", type=int, default=0,
+                    help="page-restore preload distance (0 = planner d*)")
+    ap.add_argument("--max-active-tokens", type=int, default=0)
+    ap.add_argument("--no-prefix-sharing", action="store_true")
+    ap.add_argument("--log-every", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -30,12 +52,31 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = zoo.build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, EngineConfig(
-        batch_slots=args.slots, max_seq=args.max_seq,
-        prefill_bucket=min(64, args.max_seq // 2)))
 
-    rng = jax.random.PRNGKey(1)
-    import numpy as np
+    if args.dense:
+        eng = ServingEngine(cfg, params, EngineConfig(
+            batch_slots=args.slots, max_seq=args.max_seq,
+            prefill_bucket=min(64, args.max_seq // 2)))
+    else:
+        buckets = tuple(b for b in (16, 32, 64, 128) if b <= args.max_seq)
+        hook = (lambda s: print(
+            f"[serve] tick {s['tick']:4d}  {s['tokens_per_sec']:6.1f} tok/s"
+            f"  live {s['live_slots']}  queued {s['queued']}"
+            f"  faults {s['page_faults']}  shared {s['shared_page_hits']}"
+            f"  hidden {s['modeled_restore_latency_hidden']:.0%}")
+            if s["tick"] % args.log_every == 0 else None)
+        eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+            batch_slots=args.slots, max_seq=args.max_seq,
+            page_tokens=args.page_tokens, hot_pages=args.hot_pages,
+            prefill_buckets=buckets or (args.max_seq,),
+            preload_distance=args.distance or None,
+            max_active_tokens=args.max_active_tokens,
+            share_prefix_pages=not args.no_prefix_sharing),
+            metrics_hook=hook)
+        print(f"[serve] paged KV: {eng.layout.features} packed features/token"
+              f", {args.page_tokens} tokens/page, planned d*="
+              f"{eng.pool.distance}")
+
     prompts = np.random.default_rng(0).integers(
         1, cfg.vocab_size, size=(args.requests, 8)).tolist()
     t0 = time.time()
@@ -48,6 +89,12 @@ def main(argv=None):
         print(f"[serve] req {rid}: {toks}")
     print(f"[serve] {total} tokens in {dt:.2f}s "
           f"({total / max(dt, 1e-9):.1f} tok/s, {args.slots} slots)")
+    if not args.dense:
+        snap = eng.snapshot()
+        print(f"[serve] pages allocated {snap['pages_allocated']}, faults "
+              f"{snap['page_faults']}, evictions {snap['evictions']}, "
+              f"shared hits {snap['shared_page_hits']}, mean queue wait "
+              f"{snap['mean_queue_latency']:.1f} ticks")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ import numpy as np
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_config
 from repro.data import DataConfig, TokenPipeline
+from repro.launch import mesh as mesh_lib
 from repro.launch import steps as S
 from repro.models import module as M
 from repro.models import zoo
@@ -61,7 +62,7 @@ def main(argv=None):
                               warmup_steps=max(1, args.steps // 20))
     train_step = S.make_train_step(cfg, opt_cfg, accum=args.accum)
 
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         pspecs = M.param_specs(model.params, mesh)
         pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                               is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval"))

@@ -201,16 +201,28 @@ def attention_apply(
     window = cfg.sliding_window if local else None
 
     if kind == "decode":
-        # Global layers: cache holds max_seq slots, write at idx.
-        # Local layers: cache is a RING of `window` slots (token t lives at
-        # slot t % window); overwriting implements the sliding window, so no
-        # window term is needed in the mask — only "slot already filled".
-        idx = cache["idx"]
+        # Per-slot fill levels: idx is a (B,) vector — each serving slot
+        # tracks its own sequence length, which is what lets a continuous-
+        # batching engine refill one slot without touching the others.
+        # Global layers: cache holds max_seq slots, token t at row t.
+        # Local layers, non-paged: cache is a RING of `window` slots (token t
+        # lives at slot t % window); overwriting implements the sliding
+        # window, so the mask only needs "slot already filled".
+        # Local layers, paged_kv: cache is dense token-indexed like global
+        # (pages must map 1:1 onto token ranges), so the sliding window is an
+        # explicit mask term instead.
+        assert T == 1, "decode processes one token per step"
+        idx = jnp.broadcast_to(jnp.asarray(cache["idx"], jnp.int32), (B,))
         S = cache["k"].shape[1]
-        write = jax.lax.rem(idx, S)
-        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0))
-        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0))
-        mask = (jnp.arange(S)[None, :] <= idx)[:, None, None, None, :]  # (1,1,1,1,S)
+        write = jax.lax.rem(idx, S)                       # (B,)
+        rows = jnp.arange(B)
+        kc = cache["k"].at[rows, write].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[rows, write].set(v[:, 0].astype(cache["v"].dtype))
+        jk = jnp.arange(S)[None, :]
+        mask2d = jk <= idx[:, None]                       # (B, S)
+        if cfg.paged_kv and window is not None and S > window:
+            mask2d &= jk > idx[:, None] - window
+        mask = mask2d[:, None, None, None, :]             # (B,1,1,1,S)
         out = _attend(q, kc, vc, mask=mask, softcap=cfg.attn_softcap, scale=scale)
         new_cache = {"k": kc, "v": vc, "idx": idx + 1}
     else:
@@ -225,7 +237,7 @@ def attention_apply(
         if kind == "prefill":
             kc, vc = k, v
             target = max_seq or T
-            if window is not None:
+            if window is not None and not cfg.paged_kv:
                 target = min(window, target)
             if T > target:
                 # keep the last `target` tokens, ring-aligned (slot = t % W)
@@ -236,7 +248,7 @@ def attention_apply(
                 pad = ((0, 0), (0, target - T), (0, 0), (0, 0))
                 kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
             new_cache = {"k": kc.astype(jnp.bfloat16), "v": vc.astype(jnp.bfloat16),
-                         "idx": jnp.int32(T)}
+                         "idx": jnp.full((B,), T, jnp.int32)}
     y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
     return y, new_cache
 
@@ -245,12 +257,13 @@ def attention_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
     """Abstract cache entry for one attention layer (dry-run input_specs)."""
     K, hd = cfg.num_kv_heads, cfg.head_dim
     arr = jax.ShapeDtypeStruct((batch, max_seq, K, hd), jnp.bfloat16)
-    return {"k": arr, "v": arr, "idx": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"k": arr, "v": arr,
+            "idx": jax.ShapeDtypeStruct((batch,), jnp.int32)}
 
 
 def attention_cache_logical():
     kv = ("cache_batch", "cache_seq", "act_kv_heads", "head_dim")
-    return {"k": kv, "v": kv, "idx": ()}
+    return {"k": kv, "v": kv, "idx": ("cache_batch",)}
 
 
 # --------------------------------------------------------------------------

@@ -74,13 +74,17 @@ def mla_apply(
     q_nope, q_rope = _project_q(p, x, cfg, positions)
 
     if kind == "decode":
-        idx = cache["idx"]
+        # Per-slot fill levels (idx: (B,)) — see layers.attention_apply.
+        assert T == 1, "decode processes one token per step"
+        idx = jnp.broadcast_to(jnp.asarray(cache["idx"], jnp.int32), (B,))
         c_new, r_new = _compress_kv(p, x, cfg, positions)
-        c_kv = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, idx, 0))
-        k_rope = jax.lax.dynamic_update_slice(
-            cache["k_rope"], r_new.astype(cache["k_rope"].dtype), (0, idx, 0))
-        S = c_kv.shape[1]
+        rows = jnp.arange(B)
+        S = cache["c_kv"].shape[1]
+        write = jax.lax.rem(idx, S)
+        c_kv = cache["c_kv"].at[rows, write].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, write].set(
+            r_new[:, 0].astype(cache["k_rope"].dtype))
         # absorbed path: q into compressed space; attend over (c_kv, k_rope)
         wkv_b_k = p["wkv_b"][..., :dn]                      # (kvr, H, dn)
         wkv_b_v = p["wkv_b"][..., dn:]                      # (kvr, H, dv)
@@ -89,7 +93,8 @@ def mla_apply(
             jnp.einsum("bthr,bsr->bhts", q_abs, c_kv)
             + jnp.einsum("bthn,bsn->bhts", q_rope, k_rope)
         ).astype(jnp.float32) * scale
-        mask = (jnp.arange(S)[None, None, None, :] <= idx)
+        mask = (jnp.arange(S)[None, None, None, :]
+                <= idx[:, None, None, None])
         logits = jnp.where(mask, logits, NEG_INF)
         probs = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
         o_c = jnp.einsum("bhts,bsr->bthr", probs, c_kv)     # (B,T,H,kvr)
@@ -124,7 +129,7 @@ def mla_apply(
                 kr_c = jnp.pad(k_rope, ((0, 0), (0, target - T), (0, 0)))
             new_cache = {"c_kv": ckv_c.astype(jnp.bfloat16),
                          "k_rope": kr_c.astype(jnp.bfloat16),
-                         "idx": jnp.int32(T)}
+                         "idx": jnp.full((B,), T, jnp.int32)}
     y = jnp.einsum("bthv,hvd->btd", out, p["wo"])
     return y, new_cache
 
@@ -133,7 +138,7 @@ def mla_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
     return {
         "c_kv": jax.ShapeDtypeStruct((batch, max_seq, cfg.kv_lora_rank), jnp.bfloat16),
         "k_rope": jax.ShapeDtypeStruct((batch, max_seq, cfg.qk_rope_head_dim), jnp.bfloat16),
-        "idx": jax.ShapeDtypeStruct((), jnp.int32),
+        "idx": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
 
 
@@ -141,5 +146,5 @@ def mla_cache_logical():
     return {
         "c_kv": ("cache_batch", "cache_seq", "kv_rank"),
         "k_rope": ("cache_batch", "cache_seq", "kv_rank"),
-        "idx": (),
+        "idx": ("cache_batch",),
     }

@@ -96,6 +96,8 @@ def _block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
             return MLA.mla_cache_spec(cfg, batch, max_seq)
         return L.attention_cache_spec(cfg, batch, max_seq)
     if kind == "local":
+        if cfg.paged_kv:            # dense token-indexed layout (pageable)
+            return L.attention_cache_spec(cfg, batch, max_seq)
         window = min(cfg.sliding_window or max_seq, max_seq)
         return L.attention_cache_spec(cfg, batch, window)
     if kind == "shared_attn":
@@ -311,11 +313,22 @@ def loss_fn(params, batch, *, cfg: ModelConfig):
 
 def prefill_fn(params, batch, *, cfg: ModelConfig, max_seq=None):
     """Returns (last-token logits (B,V), caches). `max_seq` pre-sizes the
-    emitted caches for the decode phase (serving engine contract)."""
+    emitted caches for the decode phase (serving engine contract).
+
+    With right-padded prompts the batch may carry per-slot `lengths` (B,);
+    logits are then gathered at each row's last REAL token instead of the
+    (padded) final position. The emitted cache `idx` leaves still read T —
+    a paged engine overwrites them with the true per-slot lengths."""
     x, positions = _embed_inputs(params, batch, cfg)
     x, caches, _ = backbone(params, x, positions, cfg=cfg, step_kind="prefill",
                             max_seq=max_seq)
-    logits = L.logits_apply(params["embedding"], x[:, -1:, :], cfg=cfg)
+    if "lengths" in batch:
+        last = jnp.clip(batch["lengths"].astype(jnp.int32) - 1, 0,
+                        x.shape[1] - 1)
+        xl = x[jnp.arange(x.shape[0]), last][:, None, :]
+    else:
+        xl = x[:, -1:, :]
+    logits = L.logits_apply(params["embedding"], xl, cfg=cfg)
     return logits[:, 0, :], caches
 
 

@@ -1,3 +1,17 @@
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.engine import (
+    EngineConfig,
+    EngineMetrics,
+    PagedEngineConfig,
+    PagedServingEngine,
+    Request,
+    ServingEngine,
+)
+from repro.serving.kv_pages import KVPagePool, PackedKVLayout, PageConfig
+from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
 
-__all__ = ["EngineConfig", "Request", "ServingEngine"]
+__all__ = [
+    "EngineConfig", "Request", "ServingEngine",
+    "PagedEngineConfig", "PagedServingEngine", "EngineMetrics",
+    "KVPagePool", "PackedKVLayout", "PageConfig",
+    "AdmissionScheduler", "SchedulerConfig",
+]

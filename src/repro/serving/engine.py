@@ -1,20 +1,37 @@
-"""Batched serving engine: slot scheduler + prefill/decode over the zoo.
+"""Serving engines: dense reference + paged, PUL-tiered continuous batching.
 
-Continuous-batching-lite: a fixed pool of B slots, each holding one request's
-progress; finished slots are refilled from the queue between decode steps.
-Per-slot state lives inside the *batched* KV caches (cache idx is per-slot
-via attention masks keyed on pos0). Prefill pads prompts to a bucket so one
-compiled prefill_step serves many lengths.
+Two engines share the zoo's prefill/decode entry points:
 
-The decode loop is the serving face of PUL: caches stream through the
-pul_attention/pul_gather kernels on TPU; the engine itself never re-compiles
-once warmed (fixed shapes), which is what lets the slot scheduler interleave
-arbitrary request mixes.
+  * :class:`ServingEngine` — the dense-cache reference ("continuous-
+    batching-lite"): a fixed pool of B slots over monolithic per-slot KV
+    that never leaves fast memory; admission re-prefills the batch. Kept as
+    the differential-test oracle and as the simplest serving path.
+
+  * :class:`PagedServingEngine` — the production-shaped engine this repo
+    exists to showcase: KV lives in fixed-size pages managed by the PUL
+    page pool (`serving.kv_pages`), requests are admitted by a token-budget
+    scheduler (`serving.scheduler`), slots refill per step without touching
+    their neighbours (per-slot cache fill levels), same-bucket requests
+    sharing a page-aligned prompt prefix share prompt pages, and cold pages
+    ride UNLOAD/PRELOAD descriptors planned at the paper's d* distance.
+
+Decode math is identical between the two: the paged engine assembles each
+step's dense cache view from pages (token r of slot b == packed row r), so
+greedy token streams match the dense reference bit-for-bit — the invariant
+`tests/test_paged_serving.py` enforces across the zoo subset. On TPU the
+assembly is the page-indexed PUL gather (`kernels.pul_page_gather`, enabled
+with ``use_pallas_gather=True``) and the attention itself can consume pages
+directly (`kernels.pul_paged_decode_attention`).
+
+MoE caveat: capacity-factor dispatch mixes tokens across the batch, so MoE
+archs serve fine but are not bitwise batch-size-invariant; the differential
+zoo subset uses dense archs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,17 +39,24 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import zoo
+from repro.serving.kv_pages import (
+    KVPagePool,
+    PackedKVLayout,
+    PageConfig,
+    TRASH_FRAME,
+    ZERO_FRAME,
+)
+from repro.serving.scheduler import (
+    Admission,
+    AdmissionScheduler,
+    Request,
+    SchedulerConfig,
+)
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
+# ========================================================================== #
+# dense reference engine
+# ========================================================================== #
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     batch_slots: int = 4
@@ -42,6 +66,9 @@ class EngineConfig:
 
 
 class ServingEngine:
+    """Dense-cache slot engine (left-padded bucket prefill, batch re-prefill
+    on admission). The differential-test oracle for the paged engine."""
+
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig = EngineConfig()):
         self.model_cfg = cfg
         self.cfg = engine_cfg
@@ -55,6 +82,7 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * B
         self.slot_pos: np.ndarray = np.zeros((B,), np.int32)  # next position
         self.queue: List[Request] = []
+        self._rng = np.random.default_rng(0)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request):
@@ -67,8 +95,9 @@ class ServingEngine:
         """Fill free slots; (re)prefill the whole batch when admitting.
 
         A production engine prefills only new slots with per-slot cache
-        writes; to keep one compiled path we re-prefill the batch — same
-        results, admission just costs a batch prefill (documented trade)."""
+        writes (see PagedServingEngine); to keep one compiled path we
+        re-prefill the batch — same results, admission just costs a batch
+        prefill (documented trade)."""
         free = self._free_slots()
         if not free or not self.queue:
             return
@@ -94,8 +123,12 @@ class ServingEngine:
         for i, r in enumerate(self.slot_req):
             if r is None:
                 continue
-            nxt = int(np.argmax(logits[i])) if self.cfg.greedy else int(
-                np.random.default_rng(0).choice(logits.shape[-1]))
+            if self.cfg.greedy:
+                nxt = int(np.argmax(logits[i]))
+            else:
+                z = logits[i].astype(np.float64) - logits[i].max()
+                p = np.exp(z)
+                nxt = int(self._rng.choice(p.shape[-1], p=p / p.sum()))
             r.out_tokens.append(nxt)
             if len(r.out_tokens) >= r.max_new_tokens:
                 r.done = True
@@ -129,3 +162,404 @@ class ServingEngine:
         for rid, r in submitted.items():
             done[rid] = r.out_tokens
         return done
+
+
+# ========================================================================== #
+# paged engine
+# ========================================================================== #
+@dataclasses.dataclass(frozen=True)
+class PagedEngineConfig:
+    batch_slots: int = 4
+    max_seq: int = 256
+    page_tokens: int = 16
+    hot_pages: int = 0              # 0 -> size for every live slot resident
+    prefill_buckets: Tuple[int, ...] = (16, 32, 64)
+    max_active_tokens: int = 0      # 0 -> slots * max_seq
+    preload_distance: Optional[int] = None   # None -> planner d*
+    share_prefix_pages: bool = True
+    use_pallas_gather: bool = False  # route page assembly through pul_gather
+    greedy: bool = True
+    sample_seed: int = 0            # rng seed for greedy=False sampling
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    ticks: int = 0
+    tokens_emitted: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    wall_time: float = 0.0
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.tokens_emitted / self.wall_time if self.wall_time else 0.0
+
+
+class PagedServingEngine:
+    """Continuous batching over a paged, PUL-tiered KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 engine_cfg: PagedEngineConfig = PagedEngineConfig(),
+                 metrics_hook: Optional[Callable[[Dict[str, Any]], None]] = None):
+        self.base_cfg = cfg
+        self.model_cfg = dataclasses.replace(cfg, paged_kv=True)
+        self.cfg = engine_cfg
+        self.metrics_hook = metrics_hook
+        self.model = zoo.build_model(self.model_cfg)
+        self.params = params
+
+        B, S, P = engine_cfg.batch_slots, engine_cfg.max_seq, engine_cfg.page_tokens
+        if S % P:
+            raise ValueError(f"max_seq ({S}) must be a multiple of "
+                             f"page_tokens ({P})")
+        if max(engine_cfg.prefill_buckets) > S:
+            raise ValueError("prefill bucket exceeds max_seq")
+        self.n_pages_per_slot = S // P
+
+        self.layout = PackedKVLayout(self.model_cfg, B, S)
+        hot = engine_cfg.hot_pages or (B * self.n_pages_per_slot + 2)
+        gqa = cfg.num_heads // max(cfg.num_kv_heads, 1)
+        self.pool = KVPagePool(
+            PageConfig(page_tokens=P, hot_frames=hot + 2,
+                       preload_distance=engine_cfg.preload_distance,
+                       share_prefix_pages=engine_cfg.share_prefix_pages),
+            max(self.layout.features, 1), gqa_group=gqa)
+        self.scheduler = AdmissionScheduler(SchedulerConfig(
+            prefill_buckets=engine_cfg.prefill_buckets,
+            max_active_tokens=engine_cfg.max_active_tokens or B * S,
+            page_tokens=P))
+
+        # compiled entry points: one prefill per bucket, one decode
+        self._prefill_fns: Dict[int, Callable] = {}
+        self._decode = jax.jit(self.model.decode_step)
+
+        # slot state
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.slot_len = np.zeros((B,), np.int32)    # tokens cached per slot
+        self.slot_pages: List[List[int]] = [[] for _ in range(B)]
+        self.paused: List[bool] = [False] * B
+        spec, _ = self.model.cache_specs(B, S)
+        self.resident = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        self.metrics = EngineMetrics()
+        self.requests: Dict[int, Request] = {}
+        self._rng = np.random.default_rng(engine_cfg.sample_seed)
+        self._paused_state: Dict[int, Dict[Tuple[str, ...], Any]] = {}
+        self._tick = 0
+
+    # ------------------------------------------------------------------ #
+    def _prefill_for(self, bucket: int) -> Callable:
+        if bucket not in self._prefill_fns:
+            model = self.model
+            self._prefill_fns[bucket] = jax.jit(
+                lambda p, b, _bucket=bucket: model.prefill(
+                    p, b, max_seq=_bucket))
+        return self._prefill_fns[bucket]
+
+    def submit(self, req: Request):
+        if self.scheduler.request_pages(req) > self.pool.capacity:
+            raise ValueError(
+                f"request {req.rid} needs {self.scheduler.request_pages(req)}"
+                f" pages; hot tier holds {self.pool.capacity}")
+        if self.scheduler.request_cost(req) > self.scheduler.cfg.max_active_tokens:
+            raise ValueError(f"request {req.rid} exceeds the token budget")
+        self.requests[req.rid] = req
+        self.scheduler.submit(req, self._tick)
+
+    # ------------------------------------------------------------------ #
+    def _live_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req)
+                if r is not None and not self.paused[i]]
+
+    def _active_tokens(self) -> int:
+        return sum(self.slot_req[i].bucket + self.slot_req[i].max_new_tokens
+                   for i in range(len(self.slot_req))
+                   if self.slot_req[i] is not None)
+
+    def _live_page_count(self) -> int:
+        return sum(len(self.slot_pages[i])
+                   for i, r in enumerate(self.slot_req) if r is not None)
+
+    # ------------------------------------------------------------------ #
+    # admission + per-slot prefill
+    # ------------------------------------------------------------------ #
+    def _admit(self):
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        admissions = self.scheduler.admit(
+            free,
+            active_tokens=self._active_tokens(),
+            free_hot_frames=self.pool.capacity - self._live_page_count(),
+            now=self._tick)
+        by_bucket: Dict[int, List[Admission]] = {}
+        for a in admissions:
+            by_bucket.setdefault(a.bucket, []).append(a)
+        for bucket, group in sorted(by_bucket.items()):
+            self._prefill_group(bucket, group)
+
+    def _prefill_group(self, bucket: int, group: List[Admission]):
+        B, P = self.cfg.batch_slots, self.cfg.page_tokens
+        toks = np.zeros((B, bucket), np.int32)
+        lengths = np.ones((B,), np.int32)
+        prompts: Dict[int, List[int]] = {}
+        for a in group:
+            prompt = a.request.prompt[-bucket:]      # right-pad, keep tail
+            toks[a.slot, :len(prompt)] = prompt
+            lengths[a.slot] = len(prompt)
+            prompts[a.slot] = prompt
+            self.slot_req[a.slot] = a.request
+        batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lengths)}
+        logits, caches = self._prefill_for(bucket)(self.params, batch)
+        self.metrics.prefills += 1
+        packed = (self.layout.pack(caches)
+                  if self.layout.features else None)   # (B, bucket, F)
+
+        for a in group:
+            slot, prompt = a.slot, prompts[a.slot]
+            n = len(prompt)
+            pids: List[int] = []
+            if self.layout.features:
+                n_full = n // P
+                for j in range(-(-n // P)):
+                    lo, hi = j * P, min((j + 1) * P, n)
+                    if j < n_full:
+                        key = (bucket, tuple(prompt[:hi]))
+                        pid = self.pool.lookup_shared(key)
+                        if pid is None:
+                            pid = self.pool.alloc(shared_key=key
+                                                  if self.cfg.share_prefix_pages
+                                                  else None)
+                            self.pool.write_page(pid, packed[slot, lo:hi],
+                                                 hi - lo)
+                    else:
+                        pid = self.pool.alloc()
+                        self.pool.write_page(pid, packed[slot, lo:hi], hi - lo)
+                    pids.append(pid)
+            self.slot_pages[slot] = pids
+            self.slot_len[slot] = n
+            self.paused[slot] = False
+            self._merge_resident(caches, slot)
+            self._emit_token(slot, np.asarray(logits[slot]))
+
+    def _merge_resident(self, fresh, slot: int):
+        """Copy one slot's NON-pageable cache rows (SSM states, idx) from a
+        freshly prefilled tree into the carried resident tree."""
+        pageable = {e.keys for e in self.layout.entries}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.resident)
+        flat_fresh = dict(jax.tree_util.tree_flatten_with_path(fresh)[0])
+        out = []
+        for path, leaf in flat:
+            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            if keys in pageable:
+                out.append(leaf)
+                continue
+            src = flat_fresh[path]
+            ax = 1 if keys[0] == "groups" else 0
+            idx = (slice(None),) * ax + (slot,)
+            out.append(leaf.at[idx].set(src[idx].astype(leaf.dtype)))
+        self.resident = jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------ #
+    # decode
+    # ------------------------------------------------------------------ #
+    def _set_idx(self, tree, idx: np.ndarray):
+        """Overwrite every cache `idx` leaf with per-slot fill levels."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        vec = jnp.asarray(idx, jnp.int32)
+        out = []
+        for path, leaf in flat:
+            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            if keys[-1] == "idx":
+                leaf = jnp.broadcast_to(vec, leaf.shape).astype(leaf.dtype)
+            out.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _assemble(self) -> Any:
+        """Build the decode cache tree: pages -> dense token-indexed view."""
+        if not self.layout.features:
+            return self._set_idx(self.resident, self.slot_len)
+        B, P = self.cfg.batch_slots, self.cfg.page_tokens
+        frames = np.full((B, self.n_pages_per_slot), ZERO_FRAME, np.int32)
+        for i in self._live_slots():
+            pids = self.slot_pages[i]
+            frames[i, :len(pids)] = self.pool.frames_of(pids)
+        if self.cfg.use_pallas_gather:
+            from repro.kernels import pul_page_gather
+            from repro.core import PULConfig
+            d = min(self.pool.distance, self.pool.cfg.fifo_depth)
+            packed = pul_page_gather(
+                self.pool.store, jnp.asarray(frames),
+                cfg=PULConfig(distance=max(1, d)))
+        else:
+            packed = self.pool.store[jnp.asarray(frames)].reshape(
+                B, self.cfg.max_seq, -1)
+        tree = self.layout.unpack_into(self.resident, packed)
+        return self._set_idx(tree, self.slot_len)
+
+    def _ensure_tail_pages(self):
+        """Every live slot needs a writable page for the incoming token."""
+        P = self.cfg.page_tokens
+        for i in self._live_slots():
+            pos = int(self.slot_len[i])
+            if pos // P == len(self.slot_pages[i]):
+                self.slot_pages[i].append(self.pool.alloc())
+
+    def _decode_step(self):
+        live = self._live_slots()
+        if not live:
+            return
+        B = self.cfg.batch_slots
+        self._ensure_tail_pages()
+        needed = sorted({pid for i in live for pid in self.slot_pages[i]})
+        faults = self.pool.ensure_hot(needed)
+
+        toks = np.zeros((B, 1), np.int32)
+        pos0 = np.zeros((B,), np.int32)
+        for i in live:
+            toks[i, 0] = self.slot_req[i].out_tokens[-1]
+            pos0[i] = self.slot_len[i]
+        tree = self._assemble()
+        logits, new_tree = self._decode(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "pos0": jnp.asarray(pos0)}, tree)
+        self.metrics.decode_steps += 1
+
+        # write the step's new KV rows back into each live slot's tail page
+        if self.layout.features:
+            P = self.cfg.page_tokens
+            rows = self.layout.pack_rows(new_tree, jnp.asarray(self.slot_len))
+            frames = np.full((B,), TRASH_FRAME, np.int32)
+            offs = np.zeros((B,), np.int32)
+            for i in live:
+                pos = int(self.slot_len[i])
+                pid = self.slot_pages[i][pos // P]
+                frames[i] = self.pool.pages[pid].frame
+                offs[i] = pos % P
+            self.pool.write_rows(frames, offs, rows)
+        self.resident = new_tree
+
+        logits = np.asarray(logits)
+        for i in live:
+            self.slot_len[i] += 1
+            self._emit_token(i, logits[i])
+        return faults
+
+    def _emit_token(self, slot: int, logits: np.ndarray):
+        r = self.slot_req[slot]
+        if self.cfg.greedy:
+            nxt = int(np.argmax(logits))
+        else:
+            z = logits.astype(np.float64) - logits.max()
+            p = np.exp(z)
+            nxt = int(self._rng.choice(p.shape[-1], p=p / p.sum()))
+        r.out_tokens.append(nxt)
+        self.metrics.tokens_emitted += 1
+        out_of_room = int(self.slot_len[slot]) + 1 >= self.cfg.max_seq
+        if len(r.out_tokens) >= r.max_new_tokens or out_of_room:
+            self._finish(slot)
+
+    def _finish(self, slot: int):
+        self.slot_req[slot].done = True
+        for pid in self.slot_pages[slot]:
+            self.pool.unref(pid)
+        self.slot_pages[slot] = []
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self.paused[slot] = False
+        self._paused_state.pop(slot, None)
+
+    # ------------------------------------------------------------------ #
+    # preemption (vLLM-style swap-out: pages spill to the cold tier)
+    # ------------------------------------------------------------------ #
+    def _nonpageable_rows(self, slot: int) -> Dict[Tuple[str, ...], Any]:
+        """Snapshot one slot's rows of every NON-pageable cache leaf (SSM /
+        recurrent state). Attention KV needs no snapshot — it is rebuilt
+        from pages — but recurrent state advances in `resident` every decode
+        step, including for paused slots fed dummy tokens."""
+        pageable = {e.keys for e in self.layout.entries}
+        out = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.resident)[0]:
+            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            if keys in pageable or keys[-1] == "idx":
+                continue
+            ax = 1 if keys[0] == "groups" else 0
+            out[keys] = leaf[(slice(None),) * ax + (slot,)]
+        return out
+
+    def _write_nonpageable_rows(self, slot: int,
+                                saved: Dict[Tuple[str, ...], Any]):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.resident)
+        out = []
+        for path, leaf in flat:
+            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            if keys in saved:
+                ax = 1 if keys[0] == "groups" else 0
+                idx = (slice(None),) * ax + (slot,)
+                leaf = leaf.at[idx].set(saved[keys])
+            out.append(leaf)
+        self.resident = jax.tree_util.tree_unflatten(treedef, out)
+
+    def preempt(self, slot: int):
+        """Pause a slot and evict its private pages to the cold tier.
+        Shared prefix pages stay hot while other requests reference them.
+        Recurrent (non-pageable) state is snapshotted: paused slots still
+        ride through the batched decode step with dummy inputs, which would
+        otherwise advance their SSM/conv state."""
+        assert self.slot_req[slot] is not None
+        self.paused[slot] = True
+        self._paused_state[slot] = self._nonpageable_rows(slot)
+        self.pool.evict_pages(
+            [pid for pid in self.slot_pages[slot]
+             if self.pool.pages[pid].refcount == 1])
+
+    def resume(self, slot: int):
+        """Un-pause; the next decode step's ensure_hot restores the pages
+        through the planned preload path (counted as page faults), and the
+        snapshotted recurrent state is written back."""
+        assert self.slot_req[slot] is not None
+        self.paused[slot] = False
+        saved = self._paused_state.pop(slot, None)
+        if saved:
+            self._write_nonpageable_rows(slot, saved)
+
+    # ------------------------------------------------------------------ #
+    def step(self):
+        t0 = time.perf_counter()
+        self._admit()
+        faults = self._decode_step() or 0
+        self._tick += 1
+        self.metrics.ticks = self._tick
+        self.metrics.wall_time += time.perf_counter() - t0
+        if self.metrics_hook:
+            self.metrics_hook(self.snapshot(page_faults_step=faults))
+
+    def snapshot(self, **extra) -> Dict[str, Any]:
+        pm = self.pool.metrics
+        lat = self.scheduler.queue_latencies()
+        snap = {
+            "tick": self._tick,
+            "tokens_emitted": self.metrics.tokens_emitted,
+            "tokens_per_sec": self.metrics.tokens_per_sec,
+            "live_slots": len(self._live_slots()),
+            "queued": len(self.scheduler),
+            "page_faults": pm.page_faults,
+            "evictions": pm.evictions,
+            "shared_page_hits": pm.shared_hits,
+            "pages_allocated": pm.pages_allocated,
+            "hot_pages_in_use": self.pool.hot_in_use(),
+            "preload_distance": self.pool.distance,
+            "modeled_restore_latency_hidden": pm.modeled_latency_hidden,
+            "mean_queue_latency": float(np.mean(lat)) if lat else 0.0,
+        }
+        snap.update(extra)
+        return snap
+
+    def run(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
+        """Drive steps until every submitted request completes (or the tick
+        cap); returns {rid: generated tokens} for ALL submitted requests."""
+        pending = lambda: (len(self.scheduler)
+                           or any(r is not None for r in self.slot_req))
+        ticks = 0
+        while pending() and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return {rid: r.out_tokens for rid, r in self.requests.items()}

@@ -1,0 +1,392 @@
+"""Paged KV cache managed by the PUL engine.
+
+The serving-side realization of the paper's tiered-memory model: KV state is
+split into fixed-size *pages* of ``page_tokens`` tokens (tile-aligned per
+``core.pul.TPU_SUBLANE``), living in a pool of physical frames split across
+
+  * a **hot tier** — the fast memory the decode kernels read (HBM on TPU;
+    a jnp array here), bounded at ``hot_frames`` pages, and
+  * a **cold tier** — the slow memory (host DRAM / remote HBM; a numpy dict
+    here) that evicted pages spill to, with real data movement both ways.
+
+Eviction emits UNLOAD descriptors and restore emits PRELOAD descriptors
+(`core.pul.TransferRequest`); restores are *planned*: `core.planner`
+derives the preload distance d* = ceil(T_io / T_c) from page transfer time
+vs per-page decode compute, and the restore batch is replayed through the
+discrete-event twin (`core.dma`) so the engine reports how much restore
+latency the schedule hides — the paper's claim, measured per serving step.
+
+Page *contents* pack every attention layer's K and V for a token range into
+one row (`PackedKVLayout`), so one logical page id covers the whole model
+and a prefix page can be shared by every request with that prompt prefix
+(refcounted; only full, immutable prompt pages are shared).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.dma import DMAEngine, KVPageWorkload, run_kv_page_workload
+from repro.core.planner import kv_page_flops, plan_kv_page_stream
+from repro.core.pul import (
+    Direction,
+    MemoryTier,
+    PEModel,
+    HBM,
+    REMOTE_HBM,
+    TPU_SUBLANE,
+    TPU_V5E_VPU,
+    TransferRequest,
+)
+
+# kv-bearing cache leaves (dict key -> leaf is pageable when its seq axis
+# matches max_seq): standard GQA attention and MLA's compressed cache
+_KV_LEAF_KEYS = ("k", "v", "c_kv", "k_rope")
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(getattr(p, "key", str(p)) for p in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeafEntry:
+    keys: Tuple[str, ...]       # dict path into the cache tree
+    shape: Tuple[int, ...]      # full leaf shape
+    grouped: bool               # True: (G, B, S, feat...); False: (B, S, feat...)
+    nfeat: int                  # packed per-token features of this leaf
+    offset: int                 # column offset in the packed row
+
+
+class PackedKVLayout:
+    """Mapping between a model's cache tree and packed (B, S, F) KV rows.
+
+    Token t of slot b occupies row (b, t): the concatenation over every
+    pageable cache leaf of that token's features (all layers, all kv heads).
+    `pack`/`unpack` are pure jnp functions (jit-able, shape-polymorphic in
+    S so prefill buckets and the decode max_seq share one layout).
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_seq: int):
+        from repro.models import transformer as T
+        spec, _ = T.cache_specs(cfg, batch, max_seq)
+        self.cfg = cfg
+        self.batch = batch
+        self.max_seq = max_seq
+        self.entries: List[_LeafEntry] = []
+        off = 0
+        flat, _ = jax.tree_util.tree_flatten_with_path(spec)
+        for path, leaf in sorted(flat, key=lambda kv: _path_keys(kv[0])):
+            keys = _path_keys(path)
+            if keys[-1] not in _KV_LEAF_KEYS:
+                continue
+            grouped = keys[0] == "groups"
+            seq_ax = 2 if grouped else 1
+            if len(leaf.shape) <= seq_ax or leaf.shape[seq_ax] != max_seq:
+                continue
+            nfeat = int(np.prod(leaf.shape)) // (batch * max_seq)
+            self.entries.append(_LeafEntry(keys, tuple(leaf.shape), grouped,
+                                           nfeat, off))
+            off += nfeat
+        self.features = off
+
+    # ------------------------------------------------------------------ #
+    def _get(self, tree, keys):
+        node = tree
+        for k in keys:
+            node = node[k]
+        return node
+
+    def _leaf_rows(self, leaf, e: _LeafEntry):
+        """(B, S, nfeat) view of one cache leaf."""
+        if e.grouped:                       # (G, B, S, feat...) -> (B, S, -1)
+            G, B, S = leaf.shape[:3]
+            x = jnp.moveaxis(leaf, 0, 2)    # (B, S, G, feat...)
+            return x.reshape(B, S, -1)
+        B, S = leaf.shape[:2]
+        return leaf.reshape(B, S, -1)
+
+    def pack(self, tree) -> jnp.ndarray:
+        """Cache tree -> (B, S, F) packed KV rows (S = tree's seq size)."""
+        return jnp.concatenate(
+            [self._leaf_rows(self._get(tree, e.keys), e)
+             for e in self.entries], axis=-1)
+
+    def pack_rows(self, tree, idx) -> jnp.ndarray:
+        """One row per slot: (B, F) at per-slot positions `idx` (B,)."""
+        B = idx.shape[0]
+        rows = jnp.arange(B)
+        outs = []
+        for e in self.entries:
+            leaf = self._get(tree, e.keys)
+            S = leaf.shape[2 if e.grouped else 1]
+            i = jnp.clip(idx, 0, S - 1)
+            if e.grouped:
+                x = jnp.moveaxis(leaf, 0, 2)        # (B, S, G, feat...)
+                outs.append(x[rows, i].reshape(B, -1))
+            else:
+                outs.append(leaf[rows, i].reshape(B, -1))
+        return jnp.concatenate(outs, axis=-1)
+
+    def unpack_into(self, tree, packed: jnp.ndarray):
+        """Return `tree` with every pageable leaf replaced from `packed`
+        ((B, S, F)); non-pageable leaves (SSM states, idx) pass through."""
+        B, S, _ = packed.shape
+        # tree_map rebuilds every container, so in-place edits below only
+        # touch the fresh copy, never the caller's tree
+        new = jax.tree_util.tree_map(lambda x: x, tree)
+        for e in self.entries:
+            cols = packed[..., e.offset:e.offset + e.nfeat]
+            if e.grouped:
+                G = e.shape[0]
+                feat = e.shape[3:]
+                leaf = jnp.moveaxis(cols.reshape(B, S, G, *feat), 2, 0)
+            else:
+                leaf = cols.reshape(B, S, *e.shape[2:])
+            node = new
+            for k in e.keys[:-1]:
+                node = node[k]
+            node[e.keys[-1]] = leaf.astype(self._get(tree, e.keys).dtype)
+        return new
+
+
+# -------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PageConfig:
+    """Knobs of the paged-KV pool (the serving face of PULConfig)."""
+
+    page_tokens: int = 16               # tokens per page, TPU_SUBLANE-aligned
+    hot_frames: int = 0                 # 0 -> sized to fit every live slot
+    fast_tier: MemoryTier = HBM
+    slow_tier: MemoryTier = REMOTE_HBM
+    pe: PEModel = TPU_V5E_VPU
+    preload_distance: Optional[int] = None   # None -> planner d*
+    fifo_depth: int = 64
+    share_prefix_pages: bool = True
+
+    def __post_init__(self):
+        if self.page_tokens % TPU_SUBLANE != 0:
+            raise ValueError(
+                f"page_tokens ({self.page_tokens}) must be a multiple of "
+                f"TPU_SUBLANE ({TPU_SUBLANE}) to keep page DMAs tile-aligned")
+
+
+@dataclasses.dataclass
+class PoolMetrics:
+    page_faults: int = 0        # pages restored from the cold tier
+    evictions: int = 0          # pages written out to the cold tier
+    shared_hits: int = 0        # prompt pages reused via prefix sharing
+    pages_allocated: int = 0
+    modeled_restore_time: float = 0.0   # DMA-twin time of all restore batches
+    modeled_restore_stall: float = 0.0  # PE stall within those batches
+    descriptors: List[TransferRequest] = dataclasses.field(default_factory=list)
+
+    @property
+    def modeled_latency_hidden(self) -> float:
+        """Fraction of restore wall-time the planned preload overlapped."""
+        if self.modeled_restore_time <= 0:
+            return 1.0
+        return 1.0 - self.modeled_restore_stall / self.modeled_restore_time
+
+
+@dataclasses.dataclass
+class _PageMeta:
+    frame: Optional[int]        # hot frame index, or None when cold
+    refcount: int = 1
+    last_used: int = 0
+    shared_key: Optional[tuple] = None
+
+
+ZERO_FRAME = 0      # reserved all-zeros frame (unallocated page-table slots)
+TRASH_FRAME = 1     # reserved write sink (inactive slots' decode writes)
+RESERVED_FRAMES = 2
+
+
+class KVPagePool:
+    """Physical page frames + residency + refcounts + tier movement."""
+
+    def __init__(self, pcfg: PageConfig, features: int, *,
+                 gqa_group: int = 1, dtype=jnp.bfloat16):
+        self.cfg = pcfg
+        self.features = features
+        self.dtype = dtype
+        P = pcfg.page_tokens
+        self.page_bytes = P * features * jnp.dtype(dtype).itemsize
+        n = max(pcfg.hot_frames, RESERVED_FRAMES + 1)
+        self.store = jnp.zeros((n, P, features), dtype)
+        self.free_frames: List[int] = list(range(RESERVED_FRAMES, n))
+        self.pages: "OrderedDict[int, _PageMeta]" = OrderedDict()
+        self.cold: Dict[int, np.ndarray] = {}
+        self.prefix_index: Dict[tuple, int] = {}
+        self.metrics = PoolMetrics()
+        self._next_id = 1
+        self._clock = 0
+        # restore planning: d* from page transfer time vs per-page compute
+        self.plan = plan_kv_page_stream(
+            page_tokens=P, kv_features=features, tier=pcfg.slow_tier,
+            pe=pcfg.pe, gqa_group=gqa_group, fifo_depth=pcfg.fifo_depth,
+            itemsize=jnp.dtype(dtype).itemsize)
+        self.distance = pcfg.preload_distance or self.plan.cfg.distance
+        self._dma = DMAEngine(pcfg.slow_tier, pcfg.pe,
+                              fifo_depth=pcfg.fifo_depth)
+        self._flops_per_page = kv_page_flops(P, features, gqa_group)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def hot_frames(self) -> int:
+        return self.store.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        """Usable hot frames (page working set must fit here per step)."""
+        return self.hot_frames - RESERVED_FRAMES
+
+    def hot_in_use(self) -> int:
+        return sum(1 for m in self.pages.values() if m.frame is not None)
+
+    # ------------------------------------------------------------------ #
+    def tick(self):
+        self._clock += 1
+
+    def alloc(self, shared_key: Optional[tuple] = None) -> int:
+        """Allocate a fresh page in the hot tier; returns its page id."""
+        pid = self._next_id
+        self._next_id += 1
+        frame = self._take_frame(needed=())
+        self.pages[pid] = _PageMeta(frame=frame, last_used=self._clock,
+                                    shared_key=shared_key)
+        if shared_key is not None:
+            self.prefix_index[shared_key] = pid
+        self.metrics.pages_allocated += 1
+        return pid
+
+    def lookup_shared(self, key: tuple) -> Optional[int]:
+        if not self.cfg.share_prefix_pages:
+            return None
+        pid = self.prefix_index.get(key)
+        if pid is not None:
+            self.pages[pid].refcount += 1
+            self.metrics.shared_hits += 1
+        return pid
+
+    def ref(self, pid: int):
+        self.pages[pid].refcount += 1
+
+    def unref(self, pid: int):
+        meta = self.pages[pid]
+        meta.refcount -= 1
+        if meta.refcount > 0:
+            return
+        if meta.shared_key is not None:
+            self.prefix_index.pop(meta.shared_key, None)
+        if meta.frame is not None:
+            self.free_frames.append(meta.frame)
+        self.cold.pop(pid, None)
+        del self.pages[pid]
+
+    # ------------------------------------------------------------------ #
+    def _take_frame(self, needed: Sequence[int]) -> int:
+        """Get a free hot frame, evicting LRU pages not in `needed`."""
+        if self.free_frames:
+            return self.free_frames.pop()
+        needed = set(needed)
+        victims = sorted(
+            (m.last_used, pid) for pid, m in self.pages.items()
+            if m.frame is not None and pid not in needed)
+        if not victims:
+            raise RuntimeError(
+                f"hot tier exhausted: {self.capacity} frames all needed this "
+                "step; raise PageConfig.hot_frames or admit fewer tokens")
+        _, victim = victims[0]
+        self.evict(victim)
+        return self.free_frames.pop()
+
+    def evict(self, pid: int):
+        """Hot -> cold: real data movement + an UNLOAD descriptor."""
+        meta = self.pages[pid]
+        assert meta.frame is not None, f"page {pid} already cold"
+        self.cold[pid] = np.asarray(self.store[meta.frame])
+        self.free_frames.append(meta.frame)
+        self.metrics.evictions += 1
+        self.metrics.descriptors.append(TransferRequest(
+            Direction.UNLOAD, src=meta.frame * self.page_bytes,
+            dst=pid * self.page_bytes, nbytes=self.page_bytes, tag=pid))
+        meta.frame = None
+
+    def evict_pages(self, pids: Sequence[int]):
+        for pid in pids:
+            if self.pages[pid].frame is not None:
+                self.evict(pid)
+
+    def ensure_hot(self, pids: Sequence[int]) -> int:
+        """Restore any cold page in `pids`; returns the page-fault count.
+
+        Restores are issued as one planned batch: preload distance d* (from
+        `core.planner`), BATCH issue order, and the batch is replayed on the
+        DMA twin to account the modeled stall (the per-step page-fault cost
+        a TPU deployment would see).
+        """
+        self.tick()
+        faults = []
+        for pid in pids:
+            meta = self.pages[pid]
+            meta.last_used = self._clock
+            if meta.frame is None:
+                faults.append(pid)
+        for pid in faults:
+            meta = self.pages[pid]
+            frame = self._take_frame(needed=pids)
+            data = self.cold.pop(pid)
+            self.store = self.store.at[frame].set(jnp.asarray(data))
+            meta.frame = frame
+            self.metrics.descriptors.append(TransferRequest(
+                Direction.PRELOAD, src=pid * self.page_bytes,
+                dst=frame * self.page_bytes, nbytes=self.page_bytes, tag=pid))
+        if faults:
+            self.metrics.page_faults += len(faults)
+            stats = run_kv_page_workload(
+                self._dma,
+                KVPageWorkload(page_bytes=self.page_bytes,
+                               flops_per_page=self._flops_per_page,
+                               pages_per_step=len(faults), steps=1),
+                distance=self.distance)
+            self.metrics.modeled_restore_time += stats.total_time
+            self.metrics.modeled_restore_stall += stats.stall_time
+        return len(faults)
+
+    # ------------------------------------------------------------------ #
+    def frames_of(self, pids: Sequence[Optional[int]]) -> np.ndarray:
+        """Physical frame per page id (ZERO_FRAME for unallocated slots).
+        All pages must be hot (call ensure_hot first)."""
+        out = np.full((len(pids),), ZERO_FRAME, np.int32)
+        for i, pid in enumerate(pids):
+            if pid is None:
+                continue
+            frame = self.pages[pid].frame
+            assert frame is not None, f"page {pid} is cold at gather time"
+            out[i] = frame
+        return out
+
+    def write_page(self, pid: int, rows: jnp.ndarray, n_valid: int):
+        """Fill (a prefix of) one hot page with packed KV rows."""
+        meta = self.pages[pid]
+        P = self.cfg.page_tokens
+        pad = P - n_valid
+        if pad:
+            rows = jnp.pad(rows[:n_valid], ((0, pad), (0, 0)))
+        self.store = self.store.at[meta.frame].set(rows.astype(self.dtype))
+
+    def write_rows(self, frames: np.ndarray, offsets: np.ndarray,
+                   rows: jnp.ndarray):
+        """Scatter one packed row per slot into (frame, offset) positions.
+        Inactive slots should point at TRASH_FRAME."""
+        self.store = self.store.at[
+            jnp.asarray(frames), jnp.asarray(offsets)].set(
+                rows.astype(self.dtype))
+        # keep the reserved zero frame all-zeros even if misused
+        assert ZERO_FRAME not in frames.tolist(), "write to the zero frame"

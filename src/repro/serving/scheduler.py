@@ -1,0 +1,131 @@
+"""Admission control for the paged serving engine.
+
+Token-budget continuous batching: requests queue FIFO; a request is admitted
+into a free slot when (a) a slot is free, (b) the batch's token budget —
+the sum over live slots of worst-case final length (prefill bucket +
+max_new_tokens) — stays within ``max_active_tokens``, and (c) the paged KV
+pool has hot frames for its worst-case page count. Admission picks the
+smallest prefill bucket that fits the prompt (prefix-length bucketing: one
+compiled prefill per bucket serves all lengths in it, and same-bucket
+requests sharing a page-aligned prompt prefix share prompt pages bitwise).
+
+Queue latency (submit tick -> admit tick) is recorded per request and
+surfaced through the engine's metrics hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (also used by the dense reference engine)."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # paged-engine bookkeeping
+    submit_tick: int = -1
+    admit_tick: int = -1
+    bucket: int = 0
+
+    @property
+    def queue_latency(self) -> int:
+        """Engine ticks spent queued before admission (-1: never admitted)."""
+        if self.admit_tick < 0:
+            return -1
+        return self.admit_tick - self.submit_tick
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    prefill_buckets: Tuple[int, ...] = (16, 32, 64)
+    max_active_tokens: int = 0          # 0 -> unlimited (slots are the cap)
+    page_tokens: int = 16
+
+    def __post_init__(self):
+        if not self.prefill_buckets:
+            raise ValueError("need at least one prefill bucket")
+        if tuple(sorted(self.prefill_buckets)) != tuple(self.prefill_buckets):
+            raise ValueError("prefill_buckets must be ascending")
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    slot: int
+    request: Request
+    bucket: int
+
+
+class AdmissionScheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.queue: List[Request] = []
+        self.admitted: List[Request] = []
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request, now: int):
+        req.submit_tick = now
+        self.queue.append(req)
+
+    def pick_bucket(self, prompt_len: int) -> int:
+        for b in self.cfg.prefill_buckets:
+            if prompt_len <= b:
+                return b
+        return self.cfg.prefill_buckets[-1]
+
+    def request_cost(self, req: Request) -> int:
+        """Worst-case final token count (budget unit)."""
+        bucket = self.pick_bucket(len(req.prompt))
+        return min(len(req.prompt), bucket) + req.max_new_tokens
+
+    def request_pages(self, req: Request) -> int:
+        P = self.cfg.page_tokens
+        return -(-self.request_cost(req) // P)
+
+    # ------------------------------------------------------------------ #
+    def admit(
+        self,
+        free_slots: Sequence[int],
+        *,
+        active_tokens: int,
+        free_hot_frames: int,
+        now: int,
+    ) -> List[Admission]:
+        """FIFO admission under slot / token / page budgets.
+
+        Strict FCFS: the head of the queue blocks later requests (no
+        reordering), keeping queue-latency semantics predictable.
+        """
+        out: List[Admission] = []
+        free = list(free_slots)
+        budget = self.cfg.max_active_tokens
+        tokens = active_tokens
+        frames = free_hot_frames
+        while self.queue and free:
+            req = self.queue[0]
+            cost = self.request_cost(req)
+            pages = self.request_pages(req)
+            if budget and tokens + cost > budget:
+                break
+            if pages > frames:
+                break
+            self.queue.pop(0)
+            req.admit_tick = now
+            req.bucket = self.pick_bucket(len(req.prompt))
+            tokens += cost
+            frames -= pages
+            slot = free.pop(0)
+            out.append(Admission(slot=slot, request=req, bucket=req.bucket))
+            self.admitted.append(req)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def queue_latencies(self) -> List[int]:
+        return [r.queue_latency for r in self.admitted if r.queue_latency >= 0]

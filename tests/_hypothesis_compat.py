@@ -1,0 +1,215 @@
+"""Deterministic stand-in for `hypothesis` when the real package is absent.
+
+The test suite uses a small slice of the hypothesis API:
+
+    from hypothesis import given, settings, strategies as st
+    @settings(max_examples=N, deadline=None)
+    @given(x=st.integers(0, 8), y=st.sampled_from([...]), z=st.booleans())
+    def test_...(x, y, z): ...
+
+This module implements exactly that slice with *deterministic* sampling
+(seeded per test by the test's qualified name), so property tests run — and
+reproduce — on machines without hypothesis installed. `tests/conftest.py`
+installs it into ``sys.modules["hypothesis"]`` only when the real library is
+missing; when hypothesis is available it is used unchanged.
+
+Not supported (and not used by this suite): shrinking, assume(), stateful
+testing, composite strategies.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """Base strategy: something that can draw a value from an RNG."""
+
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+    def map(self, fn):
+        return _MappedStrategy(self, fn)
+
+
+class _IntegersStrategy(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rng):
+        return rng.randint(self.min_value, self.max_value)
+
+    def _boundary_examples(self):
+        return [self.min_value, self.max_value]
+
+
+class _SampledFromStrategy(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty collection")
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+    def _boundary_examples(self):
+        return [self.elements[0], self.elements[-1]]
+
+
+class _BooleansStrategy(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+    def _boundary_examples(self):
+        return [False, True]
+
+
+class _FloatsStrategy(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rng):
+        return rng.uniform(self.min_value, self.max_value)
+
+    def _boundary_examples(self):
+        return [self.min_value, self.max_value]
+
+
+class _ListsStrategy(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+    def _boundary_examples(self):
+        return [[]] if self.min_size == 0 else []
+
+
+class _MappedStrategy(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base = base
+        self.fn = fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+    def _boundary_examples(self):
+        base = getattr(self.base, "_boundary_examples", lambda: [])()
+        return [self.fn(v) for v in base]
+
+
+def integers(min_value=0, max_value=2**31 - 1):
+    return _IntegersStrategy(min_value, max_value)
+
+
+def sampled_from(elements):
+    return _SampledFromStrategy(elements)
+
+
+def booleans():
+    return _BooleansStrategy()
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _FloatsStrategy(min_value, max_value)
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _ListsStrategy(elements, min_size=min_size, max_size=max_size)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.floats = floats
+strategies.lists = lists
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator: records the example budget on the (already-@given) fn."""
+
+    def apply(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+
+    return apply
+
+
+def _corner_cases(arg_strategies, kw_strategies):
+    """First examples: all-min and all-max corners (cheap edge coverage)."""
+    corners = []
+    for pick in (0, -1):
+        try:
+            args = [s._boundary_examples()[pick] for s in arg_strategies]
+            kw = {k: s._boundary_examples()[pick]
+                  for k, s in kw_strategies.items()}
+        except (AttributeError, IndexError):
+            return []
+        corners.append((args, kw))
+    return corners
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Decorator: runs the test over deterministically sampled examples.
+
+    The RNG seed derives from the test's qualified name so every run (and
+    every machine) sees the same example sequence. The first two examples
+    pin the all-min / all-max corners of the strategy space.
+    """
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kw):
+            n = getattr(wrapper, "_shim_settings",
+                        {"max_examples": DEFAULT_MAX_EXAMPLES})["max_examples"]
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            examples = itertools.chain(
+                _corner_cases(arg_strategies, kw_strategies),
+                ((
+                    [s.example(rng) for s in arg_strategies],
+                    {k: s.example(rng) for k, s in kw_strategies.items()},
+                ) for _ in iter(int, 1)),
+            )
+            for _, (args, kw) in zip(range(n), examples):
+                try:
+                    fn(*fixture_args, *args, **fixture_kw, **kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}): "
+                        f"args={args} kwargs={kw}") from e
+            return None
+
+        # pytest must not inject fixtures for the strategy-driven params
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in kw_strategies]
+        params = params[:len(params) - len(arg_strategies)] if arg_strategies else params
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return decorate
+
+
+def install(sys_modules) -> None:
+    """Register this shim as the `hypothesis` package in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__version__ = "0.0-shim"
+    mod._is_pul_shim = True
+    sys_modules["hypothesis"] = mod
+    sys_modules["hypothesis.strategies"] = strategies

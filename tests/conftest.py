@@ -1,0 +1,22 @@
+"""Test bootstrap: make `src/` importable and shim hypothesis if absent.
+
+Tier-1 runs as ``PYTHONPATH=src python -m pytest -x -q``; the sys.path insert
+below keeps plain ``pytest`` working too. The hypothesis shim keeps the
+property tests runnable on minimal CPU environments (the container image does
+not ship hypothesis); when the real library is installed it wins.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _hypothesis_compat import install
+
+    install(sys.modules)

@@ -1,0 +1,155 @@
+"""Invariant tests for the discrete-event DMA twin (core/dma.py):
+FIFO depth, per-direction wire serialization, BATCH-vs-SEQUENTIAL issue
+ordering (paper Fig. 5-D), and the KV-page workload's latency hiding at the
+planner's d* (the paged serving engine's modeled claim)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DMAEngine,
+    IssueStrategy,
+    KVPageWorkload,
+    MICROBLAZE,
+    NVM,
+    PULConfig,
+    REMOTE_HBM,
+    TPU_V5E_VPU,
+    kv_page_latency_hidden,
+    optimal_distance,
+    plan_kv_page_stream,
+    plan_stream,
+    run_kv_page_workload,
+)
+
+EPS = 1e-12
+
+
+def _run(eng, cfg, **kw):
+    base = dict(n_blocks=96, block_bytes=256, compute_flops_per_block=64)
+    base.update(kw)
+    return eng.run_stream(cfg, **base)
+
+
+# ------------------------------------------------------------------- FIFO
+@settings(max_examples=30, deadline=None)
+@given(
+    depth=st.integers(1, 16),
+    block=st.sampled_from([64, 1024, 8192]),
+    flops=st.integers(1, 5_000),
+    seq=st.booleans(),
+)
+def test_fifo_never_exceeds_depth(depth, block, flops, seq):
+    """Outstanding requests never exceed fifo_depth, whatever the knobs —
+    a full FIFO stalls the PE instead (paper §2 HW contract)."""
+    eng = DMAEngine(NVM, MICROBLAZE, fifo_depth=depth)
+    cfg = PULConfig(
+        distance=depth, fifo_depth=depth,
+        strategy=IssueStrategy.SEQUENTIAL if seq else IssueStrategy.BATCH)
+    _run(eng, cfg, block_bytes=block, compute_flops_per_block=flops,
+         unload_bytes_per_block=block // 2)
+    pre, unl = eng.last_channels
+    assert pre.max_outstanding <= depth
+    assert unl.max_outstanding <= depth
+
+
+# ----------------------------------------------------------- serialization
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(1, 32),
+    block=st.sampled_from([64, 512, 4096]),
+    flops=st.integers(1, 20_000),
+    seq=st.booleans(),
+)
+def test_per_direction_wire_serialization(d, block, flops, seq):
+    """Each direction's channel is ONE serial wire: transfer intervals never
+    overlap and respect enqueue order; a transfer never starts before its
+    enqueue."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    cfg = PULConfig(
+        distance=d,
+        strategy=IssueStrategy.SEQUENTIAL if seq else IssueStrategy.BATCH)
+    _run(eng, cfg, block_bytes=block, compute_flops_per_block=flops,
+         unload_bytes_per_block=block)
+    for ch in eng.last_channels:
+        prev_end = 0.0
+        for enq, start, end in ch.wire_log:    # log is in enqueue order
+            assert start >= enq - EPS
+            assert start >= prev_end - EPS     # serial, FIFO order
+            assert end >= start
+            prev_end = end
+
+
+# ------------------------------------------------------------- Fig. 5-D
+@settings(max_examples=30, deadline=None)
+@given(
+    block=st.sampled_from([64, 256, 2048]),
+    flops=st.integers(1, 2_000),
+)
+def test_batch_issue_throughput_below_plateau(block, flops):
+    """Below the latency plateau (d < d*), BATCH issue keeps the serial
+    channel gap-free: I/O throughput >= SEQUENTIAL (paper Fig. 5-D)."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    plan = plan_stream(block_bytes=block, flops_per_block=flops,
+                       tier=NVM, pe=MICROBLAZE)
+    if plan.cfg.distance <= 1:
+        return                      # no "below the plateau" region exists
+    for d in sorted({1, plan.cfg.distance // 2, plan.cfg.distance - 1}):
+        if d < 1:
+            continue
+        kw = dict(block_bytes=block, compute_flops_per_block=flops)
+        tb = _run(eng, PULConfig(distance=d), **kw)
+        ts = _run(eng, PULConfig(distance=d,
+                                 strategy=IssueStrategy.SEQUENTIAL), **kw)
+        assert tb.io_throughput >= ts.io_throughput * 0.98
+
+
+# ------------------------------------------------------ KV-page workload
+def test_kv_page_workload_dstar_hides_90pct_latency():
+    """Acceptance: at steady state the planned preload distance hides >=90%
+    of modeled page-restore latency, on both the paper's NDP tiers and the
+    TPU serving tiers (remote-HBM cold tier)."""
+    cases = [
+        # paper tiers: weak PE, compute-bound pages -> full hiding
+        (NVM, MICROBLAZE, 16, 128, 1),
+        # TPU serving tiers: decode attention is bandwidth/latency-bound;
+        # the 3us access latency is the hideable part
+        (REMOTE_HBM, TPU_V5E_VPU, 16, 128, 4),
+        (REMOTE_HBM, TPU_V5E_VPU, 32, 512, 8),
+    ]
+    for tier, pe, P, F, gqa in cases:
+        eng = DMAEngine(tier, pe)
+        plan = plan_kv_page_stream(page_tokens=P, kv_features=F,
+                                   tier=tier, pe=pe, gqa_group=gqa)
+        wl = KVPageWorkload(
+            page_bytes=P * F * 2,
+            flops_per_page=4.0 * P * F * gqa,
+            pages_per_step=4, steps=256)
+        hidden = kv_page_latency_hidden(eng, wl, distance=plan.cfg.distance)
+        assert hidden >= 0.90, (tier.name, pe.name, hidden)
+
+
+def test_kv_page_workload_dstar_beats_d1():
+    """When the plateau is beyond d=1, planning at d* hides strictly more
+    restore latency than a depth-1 pipeline."""
+    tier, pe = REMOTE_HBM, TPU_V5E_VPU
+    plan = plan_kv_page_stream(page_tokens=16, kv_features=128,
+                               tier=tier, pe=pe, gqa_group=4)
+    assert plan.cfg.distance > 1
+    eng = DMAEngine(tier, pe)
+    wl = KVPageWorkload(page_bytes=16 * 128 * 2,
+                        flops_per_page=4.0 * 16 * 128 * 4,
+                        pages_per_step=4, steps=256)
+    h_star = kv_page_latency_hidden(eng, wl, distance=plan.cfg.distance)
+    h_one = kv_page_latency_hidden(eng, wl, distance=1)
+    assert h_star > h_one
+
+
+def test_kv_page_workload_stats_accounting():
+    eng = DMAEngine(NVM, MICROBLAZE)
+    wl = KVPageWorkload(page_bytes=4096, flops_per_page=1024,
+                        pages_per_step=2, steps=32,
+                        unload_pages_per_step=1)
+    stats = run_kv_page_workload(eng, wl, distance=8)
+    assert stats.bytes_in == wl.n_pages * 4096
+    assert stats.bytes_out > 0
+    assert stats.total_time >= stats.compute_time

@@ -1,0 +1,112 @@
+"""Property tests for the planner's d* = ceil(T_io/T_c) plateau math."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DMAEngine,
+    MICROBLAZE,
+    NVM,
+    PULConfig,
+    MemoryTier,
+    kv_page_bytes,
+    kv_page_flops,
+    optimal_distance,
+    plan_kv_page_stream,
+    plan_stream,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    t_c=st.integers(1, 100_000),
+    t_io=st.integers(1, 100_000),
+    extra_latency=st.integers(0, 100_000),
+)
+def test_dstar_monotone_in_latency(t_c, t_io, extra_latency):
+    """Larger I/O latency never SHRINKS d* (the plateau only moves right)."""
+    d1 = optimal_distance(t_c * 1e-9, t_io * 1e-9)
+    d2 = optimal_distance(t_c * 1e-9, (t_io + extra_latency) * 1e-9)
+    assert d2 >= d1
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    t_c=st.integers(1, 100_000),
+    t_io=st.integers(1, 100_000),
+    faster=st.integers(1, 1_000),
+)
+def test_dstar_antitone_in_compute(t_c, t_io, faster):
+    """More compute per block (a wider window per request) never GROWS d*."""
+    d1 = optimal_distance(t_c * 1e-9, t_io * 1e-9)
+    d2 = optimal_distance((t_c + faster) * 1e-9, t_io * 1e-9)
+    assert d2 <= d1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    block=st.sampled_from([64, 256, 1024, 4096]),
+    flops=st.integers(1, 50_000),
+    deeper=st.integers(0, 48),
+)
+def test_beyond_dstar_never_faster(block, flops, deeper):
+    """Distances beyond d* never raise modeled throughput (Fig. 5-A
+    plateau): simulated time at d* is <= time at any deeper distance,
+    within the issue-cost epsilon of the discrete-event model."""
+    eng = DMAEngine(NVM, MICROBLAZE)
+    plan = plan_stream(block_bytes=block, flops_per_block=flops,
+                       tier=NVM, pe=MICROBLAZE)
+    d_star = plan.cfg.distance
+    d_deep = min(64, d_star + deeper)
+    kw = dict(n_blocks=128, block_bytes=block, compute_flops_per_block=flops)
+    t_star = eng.run_stream(PULConfig(distance=d_star), **kw).total_time
+    t_deep = eng.run_stream(PULConfig(distance=d_deep), **kw).total_time
+    assert t_star <= t_deep * 1.02
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t_c=st.integers(1, 10_000),
+    t_io=st.integers(1, 10_000),
+)
+def test_dstar_is_smallest_covering_window(t_c, t_io):
+    """d* covers the latency (d* * T_c >= T_io) and is minimal, modulo
+    the FIFO cap."""
+    tc, tio = t_c * 1e-9, t_io * 1e-9
+    d = optimal_distance(tc, tio, fifo_depth=64)
+    if d < 64:
+        assert d * tc >= tio
+        if d > 1:
+            assert (d - 1) * tc < tio
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    page_tokens=st.sampled_from([8, 16, 32, 64]),
+    kv_features=st.integers(16, 4096),
+    gqa=st.sampled_from([1, 2, 4, 8]),
+    slow_read=st.integers(1, 10_000),
+)
+def test_kv_page_plan_monotone_in_tier_latency(page_tokens, kv_features,
+                                               gqa, slow_read):
+    """The KV-page planning entry inherits d* monotonicity: a slower tier
+    never shrinks the planned restore distance."""
+    fast = MemoryTier("a", read_latency=100e-9, write_latency=100e-9,
+                      bandwidth=8 * 2**30)
+    slow = MemoryTier("b", read_latency=100e-9 + slow_read * 1e-8,
+                      write_latency=100e-9, bandwidth=8 * 2**30)
+    kw = dict(page_tokens=page_tokens, kv_features=kv_features,
+              gqa_group=gqa, pe=MICROBLAZE)
+    d_fast = plan_kv_page_stream(tier=fast, **kw).cfg.distance
+    d_slow = plan_kv_page_stream(tier=slow, **kw).cfg.distance
+    assert d_slow >= d_fast
+
+
+def test_kv_page_units():
+    assert kv_page_bytes(16, 128) == 16 * 128 * 2
+    assert kv_page_flops(16, 128, gqa_group=4) == 4.0 * 16 * 128 * 4
+    plan = plan_kv_page_stream(page_tokens=16, kv_features=128,
+                               tier=NVM, pe=MICROBLAZE)
+    assert 1 <= plan.cfg.distance <= 64
+    assert plan.predicted_time_per_block > 0

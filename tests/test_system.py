@@ -106,8 +106,9 @@ from repro.launch import steps as S
 from repro.models import module as M
 import dataclasses
 cfg = get_config("gemma2-27b").reduced()
+from repro.launch.mesh import set_mesh
 mesh = jax.make_mesh((2, 2), ("data", "model"))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     fn = S.make_train_step(cfg, accum=2)
     from repro.models import zoo
     model = zoo.build_model(cfg)
@@ -123,9 +124,16 @@ with jax.set_mesh(mesh):
     bspecs = {"tokens": jax.sharding.PartitionSpec("data"),
               "targets": jax.sharding.PartitionSpec("data"),
               "loss_mask": jax.sharding.PartitionSpec("data")}
-    compiled = jax.jit(fn, in_shardings=(pspecs, ospecs, bspecs)).lower(
+    P = jax.sharding.PartitionSpec
+    NS = jax.sharding.NamedSharding
+    to_shard = lambda tree: jax.tree.map(lambda s: NS(mesh, s), tree,
+                                         is_leaf=lambda x: isinstance(x, P))
+    compiled = jax.jit(fn, in_shardings=(
+        to_shard(pspecs), to_shard(ospecs), to_shard(bspecs))).lower(
         aparams, opt, batch).compile()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0]
     assert ca.get("flops", 0) > 0
     print("TINY_DRYRUN_OK", int(compiled.memory_analysis().temp_size_in_bytes))
 """
