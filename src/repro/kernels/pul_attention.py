@@ -78,10 +78,15 @@ def _kernel(q_vmem, k_hbm, v_hbm, o_vmem, kbuf, ksems, vbuf, vsems,
     o_vmem[0, 0] = out.astype(o_vmem.dtype)
 
 
-def _paged_decode_kernel(pt_smem, len_smem, q_vmem, k_hbm, v_hbm, o_vmem,
-                         kbuf, ksems, vbuf, vsems, *, cfg: PULConfig,
+def _paged_decode_kernel(pt_smem, len_smem, q_vmem, *rest, cfg: PULConfig,
                          P: int, n_pages: int, scale: float,
-                         softcap: Optional[float]):
+                         softcap: Optional[float], window: Optional[int],
+                         has_new: bool):
+    if has_new:
+        knew_vmem, vnew_vmem, k_hbm, v_hbm, o_vmem, \
+            kbuf, ksems, vbuf, vsems = rest
+    else:
+        k_hbm, v_hbm, o_vmem, kbuf, ksems, vbuf, vsems = rest
     b = pl.program_id(0)
     kv_h = pl.program_id(1)
     length = len_smem[b]
@@ -98,15 +103,24 @@ def _paged_decode_kernel(pt_smem, len_smem, q_vmem, k_hbm, v_hbm, o_vmem,
 
     q = q_vmem[0, 0].astype(jnp.float32)                 # (G, hd)
 
+    def _cap(logits):
+        if softcap is not None:
+            return softcap * jnp.tanh(logits / softcap)
+        return logits
+
     def body(t, views, carry):
         m, l, acc = carry
         kt = views[0][0, 0].astype(jnp.float32)          # (P, hd)
         vt = views[1][0, 0].astype(jnp.float32)
-        logits = jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale
-        if softcap is not None:
-            logits = softcap * jnp.tanh(logits / softcap)
+        logits = _cap(
+            jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale)
         jk = t * P + jax.lax.iota(jnp.int32, P)
-        logits = jnp.where((jk < length)[None, :], logits, NEG_INF)
+        msk = jk < length
+        if window is not None:
+            # the incoming query sits at absolute position `length`; cached
+            # token jk is visible iff jk > length - window
+            msk &= jk > length - window
+        logits = jnp.where(msk[None, :], logits, NEG_INF)
         bmax = jnp.max(logits, axis=-1, keepdims=True)
         new_m = jnp.maximum(m, bmax)
         corr = jnp.exp(m - new_m)
@@ -120,6 +134,18 @@ def _paged_decode_kernel(pt_smem, len_smem, q_vmem, k_hbm, v_hbm, o_vmem,
             jnp.zeros((G, 1), jnp.float32),
             jnp.zeros((G, hd), jnp.float32))
     m, l, acc = pul_loop(n_pages, [k_st, v_st], body, init, cfg)
+    if has_new:
+        # fold in the current token's K/V (not yet written to any page);
+        # it is always causally visible and always inside the window
+        kn = knew_vmem[0, 0].astype(jnp.float32)         # (1, hd)
+        vn = vnew_vmem[0, 0].astype(jnp.float32)
+        ls = _cap(jnp.dot(q, kn.T, preferred_element_type=jnp.float32)
+                  * scale)                               # (G, 1)
+        new_m = jnp.maximum(m, ls)
+        corr = jnp.exp(m - new_m)
+        p = jnp.exp(ls - new_m)
+        l = l * corr + p
+        acc = acc * corr + jnp.dot(p, vn, preferred_element_type=jnp.float32)
     o_vmem[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_vmem.dtype)
 
 
@@ -128,6 +154,9 @@ def pul_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                                lengths, *, cfg: PULConfig = PULConfig(),
                                scale: Optional[float] = None,
                                softcap: Optional[float] = None,
+                               window: Optional[int] = None,
+                               k_new: Optional[jax.Array] = None,
+                               v_new: Optional[jax.Array] = None,
                                interpret: bool = True) -> jax.Array:
     """Decode attention straight over a paged KV store (serving hot path).
 
@@ -135,6 +164,12 @@ def pul_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     physical page frames (P tokens per page); page_tables: (B, n_pages)
     int32 physical page id of each slot's logical page; lengths: (B,) valid
     tokens per slot. Returns (B, H, hd).
+
+    `window` bounds the visible range to the last `window` tokens relative to
+    the incoming query at position `lengths[b]` (sliding-window layers).
+    `k_new`/`v_new` ((B, K, hd)) carry the CURRENT token's K/V — not yet
+    written to any page — and are folded into the online softmax after the
+    page stream, so the engine can run attention before the page write-back.
 
     The kernel never materializes a contiguous KV view: pages stream from
     slow memory through a distance-d preload ring, addressed by the SMEM
@@ -145,11 +180,19 @@ def pul_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     _, n_pages = page_tables.shape
     assert H % K == 0
     G = H // K
+    has_new = k_new is not None
+    assert (v_new is not None) == has_new, "k_new/v_new come as a pair"
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
     lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
     qg = q.reshape(B, K, G, hd)
     kern = functools.partial(_paged_decode_kernel, cfg=cfg, P=P,
-                             n_pages=n_pages, scale=scale, softcap=softcap)
+                             n_pages=n_pages, scale=scale, softcap=softcap,
+                             window=window, has_new=has_new)
+    new_specs, new_args = [], []
+    if has_new:
+        new_specs = [pl.BlockSpec((1, 1, 1, hd), lambda b, h: (b, h, 0, 0)),
+                     pl.BlockSpec((1, 1, 1, hd), lambda b, h: (b, h, 0, 0))]
+        new_args = [k_new.reshape(B, K, 1, hd), v_new.reshape(B, K, 1, hd)]
     out = pl.pallas_call(
         kern,
         grid=(B, K),
@@ -158,6 +201,7 @@ def pul_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            *new_specs,
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
         ],
@@ -167,8 +211,110 @@ def pul_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
             *ring_scratch(cfg, (1, 1, P, hd), v_pages.dtype),
         ],
         interpret=interpret,
-    )(page_tables.astype(jnp.int32), lengths, qg, k_pages, v_pages)
+    )(page_tables.astype(jnp.int32), lengths, qg, *new_args,
+      k_pages, v_pages)
     return out.reshape(B, H, hd)
+
+
+def _paged_mla_decode_kernel(pt_smem, len_smem, qa_vmem, qr_vmem, cnew_vmem,
+                             rnew_vmem, ckv_hbm, kr_hbm, o_vmem,
+                             cbuf, csems, rbuf, rsems, *, cfg: PULConfig,
+                             P: int, n_pages: int, scale: float):
+    b = pl.program_id(0)
+    length = len_smem[b]
+
+    c_st = PreloadStream(ckv_hbm, cbuf, csems,
+                         index_map=lambda t: (pt_smem[b, t], 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+    r_st = PreloadStream(kr_hbm, rbuf, rsems,
+                         index_map=lambda t: (pt_smem[b, t], 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+
+    qa = qa_vmem[0].astype(jnp.float32)                  # (H, kvr)
+    qr = qr_vmem[0].astype(jnp.float32)                  # (H, dr)
+
+    def body(t, views, carry):
+        m, l, acc = carry
+        ct = views[0][0].astype(jnp.float32)             # (P, kvr)
+        rt = views[1][0].astype(jnp.float32)             # (P, dr)
+        logits = (jnp.dot(qa, ct.T, preferred_element_type=jnp.float32)
+                  + jnp.dot(qr, rt.T, preferred_element_type=jnp.float32)
+                  ) * scale                              # (H, P)
+        jk = t * P + jax.lax.iota(jnp.int32, P)
+        logits = jnp.where((jk < length)[None, :], logits, NEG_INF)
+        bmax = jnp.max(logits, axis=-1, keepdims=True)
+        new_m = jnp.maximum(m, bmax)
+        corr = jnp.exp(m - new_m)
+        p = jnp.exp(logits - new_m)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        # MLA: the compressed cache IS the value stream (absorbed decode)
+        acc = acc * corr + jnp.dot(p, ct, preferred_element_type=jnp.float32)
+        return new_m, l, acc
+
+    H, kvr = qa.shape
+    init = (jnp.full((H, 1), NEG_INF, jnp.float32),
+            jnp.zeros((H, 1), jnp.float32),
+            jnp.zeros((H, kvr), jnp.float32))
+    m, l, acc = pul_loop(n_pages, [c_st, r_st], body, init, cfg)
+    # current token's compressed KV, not yet paged
+    cn = cnew_vmem[0].astype(jnp.float32)                # (1, kvr)
+    rn = rnew_vmem[0].astype(jnp.float32)                # (1, dr)
+    ls = (jnp.dot(qa, cn.T, preferred_element_type=jnp.float32)
+          + jnp.dot(qr, rn.T, preferred_element_type=jnp.float32)) * scale
+    new_m = jnp.maximum(m, ls)
+    corr = jnp.exp(m - new_m)
+    p = jnp.exp(ls - new_m)
+    l = l * corr + p
+    acc = acc * corr + jnp.dot(p, cn, preferred_element_type=jnp.float32)
+    o_vmem[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_vmem.dtype)
+
+
+def pul_paged_mla_decode_attention(q_abs: jax.Array, q_rope: jax.Array,
+                                   ckv_pages: jax.Array, kr_pages: jax.Array,
+                                   page_tables: jax.Array, lengths,
+                                   c_new: jax.Array, r_new: jax.Array, *,
+                                   scale: float,
+                                   cfg: PULConfig = PULConfig(),
+                                   interpret: bool = True) -> jax.Array:
+    """Absorbed MLA decode attention straight over compressed-KV pages.
+
+    q_abs: (B, H, kvr) queries absorbed into the compressed space; q_rope:
+    (B, H, dr) rope-carrying queries; ckv_pages: (NP, P, kvr) and kr_pages:
+    (NP, P, dr) physical page frames (one row per token — MLA's cache is
+    head-shared); page_tables: (B, n_pages); lengths: (B,) cached tokens per
+    slot; c_new/r_new: (B, kvr)/(B, dr) the current token's compressed KV.
+    Returns o_c (B, H, kvr) — the caller applies the absorbed v up-projection.
+    """
+    B, H, kvr = q_abs.shape
+    NP, P, _ = ckv_pages.shape
+    dr = q_rope.shape[-1]
+    _, n_pages = page_tables.shape
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+    kern = functools.partial(_paged_mla_decode_kernel, cfg=cfg, P=P,
+                             n_pages=n_pages, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        out_shape=jax.ShapeDtypeStruct((B, H, kvr), q_abs.dtype),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, kvr), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H, dr), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, kvr), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, dr), lambda b: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, H, kvr), lambda b: (b, 0, 0)),
+        scratch_shapes=[
+            *ring_scratch(cfg, (1, P, kvr), ckv_pages.dtype),
+            *ring_scratch(cfg, (1, P, dr), kr_pages.dtype),
+        ],
+        interpret=interpret,
+    )(page_tables.astype(jnp.int32), lengths, q_abs, q_rope,
+      c_new.reshape(B, 1, kvr), r_new.reshape(B, 1, dr),
+      ckv_pages, kr_pages)
 
 
 def pul_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

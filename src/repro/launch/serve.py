@@ -44,6 +44,9 @@ def main(argv=None):
                     help="page-restore preload distance (0 = planner d*)")
     ap.add_argument("--max-active-tokens", type=int, default=0)
     ap.add_argument("--no-prefix-sharing", action="store_true")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="kernel-true decode: attention streams straight "
+                         "over page frames (no dense assembly)")
     ap.add_argument("--log-every", type=int, default=8)
     args = ap.parse_args(argv)
 
@@ -71,7 +74,8 @@ def main(argv=None):
             prefill_buckets=buckets or (args.max_seq,),
             preload_distance=args.distance or None,
             max_active_tokens=args.max_active_tokens,
-            share_prefix_pages=not args.no_prefix_sharing),
+            share_prefix_pages=not args.no_prefix_sharing,
+            use_paged_kernel=args.paged_kernel),
             metrics_hook=hook)
         print(f"[serve] paged KV: {eng.layout.features} packed features/token"
               f", {args.page_tokens} tokens/page, planned d*="

@@ -172,12 +172,19 @@ def attention_apply(
     *,
     cfg: ModelConfig,
     positions,
-    kind: str,                      # "train" | "prefill" | "decode"
+    kind: str,              # "train" | "prefill" | "decode" | "paged_decode"
     local: bool = False,
     cache: Optional[Dict[str, Any]] = None,
     max_seq: Optional[int] = None,  # prefill: emit caches sized for decode
+    paged: Optional[Tuple] = None,  # paged_decode: (page_table, PULConfig)
 ):
-    """Returns (y, new_cache). Cache: {"k","v": (B,Smax,K,hd), "idx": ()}."""
+    """Returns (y, new_cache). Cache: {"k","v": (B,Smax,K,hd), "idx": ()}.
+
+    kind="paged_decode" consumes a PAGED cache instead: {"k","v":
+    (NP, K, P, hd) physical page frames, "idx": (B,) per-slot fill}, with the
+    logical->physical map in `paged` — attention streams straight over the
+    pages (kernels.pul_paged_decode_attention) and the returned cache holds
+    only the current token's rows for the engine to scatter into its page."""
     B, T, D = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
@@ -200,7 +207,26 @@ def attention_apply(
     scale = 1.0 / math.sqrt(hd)
     window = cfg.sliding_window if local else None
 
-    if kind == "decode":
+    if kind == "paged_decode":
+        # Kernel-true paged decode: no dense (B, S) view is ever assembled —
+        # the PUL preload ring pulls physical pages in page-table order and
+        # the current token's K/V (not yet in any page) merges in after the
+        # stream. Sliding windows are an in-kernel mask term (paged layouts
+        # are token-indexed, never rings).
+        assert T == 1, "paged decode processes one token per step"
+        assert paged is not None, "paged_decode needs (page_table, PULConfig)"
+        from repro.kernels.pul_attention import pul_paged_decode_attention
+        page_table, pul_cfg = paged
+        idx = jnp.asarray(cache["idx"], jnp.int32).reshape(B)
+        k_new = k[:, 0].astype(cache["k"].dtype)
+        v_new = v[:, 0].astype(cache["v"].dtype)
+        out = pul_paged_decode_attention(
+            q[:, 0], cache["k"], cache["v"], page_table, idx,
+            scale=scale, softcap=cfg.attn_softcap, window=window,
+            k_new=k_new, v_new=v_new, cfg=pul_cfg)
+        out = out[:, None]
+        new_cache = {"k": k_new, "v": v_new, "idx": idx + 1}
+    elif kind == "decode":
         # Per-slot fill levels: idx is a (B,) vector — each serving slot
         # tracks its own sequence length, which is what lets a continuous-
         # batching engine refill one slot without touching the others.

@@ -158,15 +158,18 @@ def _merged_lora_attn(shared_attn, lora, cfg: ModelConfig):
 
 
 def block_apply(p, shared, x, *, cfg: ModelConfig, kind: str, positions,
-                step_kind: str, cache=None, max_seq=None):
+                step_kind: str, cache=None, max_seq=None, paged=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.float32(0.0)
+    # recurrent blocks have no pageable KV: a paged decode step is an
+    # ordinary decode step for them (state rides in the resident tree)
+    ssm_kind = "decode" if step_kind == "paged_decode" else step_kind
     if kind == "rwkv":
-        x, new_cache = SSM.rwkv_block_apply(p, x, cfg=cfg, kind=step_kind,
+        x, new_cache = SSM.rwkv_block_apply(p, x, cfg=cfg, kind=ssm_kind,
                                             state=cache)
         return x, new_cache, aux
     if kind == "mamba":
-        x, new_cache = SSM.mamba_block_apply(p, x, cfg=cfg, kind=step_kind,
+        x, new_cache = SSM.mamba_block_apply(p, x, cfg=cfg, kind=ssm_kind,
                                              state=cache)
         return x, new_cache, aux
 
@@ -181,11 +184,12 @@ def block_apply(p, shared, x, *, cfg: ModelConfig, kind: str, positions,
     if cfg.attn_type == "mla":
         h, new_cache = MLA.mla_apply(attn_p, h, cfg=cfg, positions=positions,
                                      kind=step_kind, cache=cache,
-                                     max_seq=max_seq)
+                                     max_seq=max_seq, paged=paged)
     else:
         h, new_cache = L.attention_apply(
             attn_p, h, cfg=cfg, positions=positions, kind=step_kind,
-            local=(kind == "local"), cache=cache, max_seq=max_seq)
+            local=(kind == "local"), cache=cache, max_seq=max_seq,
+            paged=paged)
     if cfg.sandwich_norm:
         h = L.rms_norm(h, blk["post_norm1"], cfg.norm_eps)
     x = x + h
@@ -219,7 +223,7 @@ def _embed_inputs(params, batch, cfg: ModelConfig):
 
 
 def backbone(params, x, positions, *, cfg: ModelConfig, step_kind: str,
-             caches=None, max_seq=None):
+             caches=None, max_seq=None, paged=None):
     """Runs dense prefix + scanned groups. Returns (x, new_caches, aux)."""
     aux_total = jnp.float32(0.0)
     new_dense = {}
@@ -229,7 +233,7 @@ def backbone(params, x, positions, *, cfg: ModelConfig, step_kind: str,
             x, nc, aux = block_apply(params["dense"][str(i)], None, x, cfg=cfg,
                                      kind="dense", positions=positions,
                                      step_kind=step_kind, cache=c,
-                                     max_seq=max_seq)
+                                     max_seq=max_seq, paged=paged)
             new_dense[str(i)] = nc
             aux_total += aux
 
@@ -256,7 +260,7 @@ def backbone(params, x, positions, *, cfg: ModelConfig, step_kind: str,
             x, nc, aux = block_apply(gp[key], shared, x, cfg=cfg, kind=kind,
                                      positions=positions,
                                      step_kind=step_kind, cache=c,
-                                     max_seq=max_seq)
+                                     max_seq=max_seq, paged=paged)
             new_gc[key] = nc
             aux_acc = aux_acc + aux
         if step_kind == "train" and cfg.seq_shard_carry:
@@ -338,5 +342,32 @@ def decode_fn(params, batch, caches, *, cfg: ModelConfig):
     x, positions = _embed_inputs(params, batch, cfg)
     x, new_caches, _ = backbone(params, x, positions, cfg=cfg,
                                 step_kind="decode", caches=caches)
+    logits = L.logits_apply(params["embedding"], x, cfg=cfg)
+    return logits[:, 0, :], new_caches
+
+
+def paged_decode_fn(params, batch, caches, *, cfg: ModelConfig,
+                    pul_distance: int = 4):
+    """Kernel-true paged decode step: attention reads KV pages directly.
+
+    batch: tokens (B,1), pos0 (B,) absolute position of the new token,
+    page_table (B, n_pages) int32 physical frame of each slot's logical
+    page. `caches` is the decode tree with every pageable leaf replaced by
+    a physical page view (`PackedKVLayout.page_views`) and idx leaves set
+    to per-slot fill levels; non-pageable leaves (SSM state) are the
+    ordinary resident state. Returns (logits (B,V), new_caches) where
+    pageable leaves hold ONLY the current token's rows — the engine
+    scatters them into each slot's tail page (`KVPagePool.write_rows`) —
+    and non-pageable leaves are advanced as in a dense decode step.
+
+    `pul_distance` is the preload distance of the in-kernel page ring
+    (static; the engine passes the planner's d*)."""
+    from repro.core import PULConfig
+    x, positions = _embed_inputs(params, batch, cfg)
+    paged = (batch["page_table"].astype(jnp.int32),
+             PULConfig(distance=pul_distance))
+    x, new_caches, _ = backbone(params, x, positions, cfg=cfg,
+                                step_kind="paged_decode", caches=caches,
+                                paged=paged)
     logits = L.logits_apply(params["embedding"], x, cfg=cfg)
     return logits[:, 0, :], new_caches

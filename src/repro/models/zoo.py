@@ -26,6 +26,8 @@ class Model:
     loss: Callable                # (params, batch) -> scalar
     prefill: Callable             # (params, batch) -> (logits, caches)
     decode_step: Callable         # (params, batch, caches) -> (logits, caches)
+    paged_decode_step: Callable   # (params, batch, page-view caches) ->
+                                  # (logits, new-token rows + state)
 
     def init(self, key):
         return M.init_tree(key, self.params)
@@ -47,6 +49,7 @@ def build_model(cfg: ModelConfig) -> Model:
         loss=functools.partial(T.loss_fn, cfg=cfg),
         prefill=functools.partial(T.prefill_fn, cfg=cfg),
         decode_step=functools.partial(T.decode_fn, cfg=cfg),
+        paged_decode_step=functools.partial(T.paged_decode_fn, cfg=cfg),
     )
 
 

@@ -15,13 +15,23 @@ Two engines share the zoo's prefill/decode entry points:
     sharing a page-aligned prompt prefix share prompt pages, and cold pages
     ride UNLOAD/PRELOAD descriptors planned at the paper's d* distance.
 
-Decode math is identical between the two: the paged engine assembles each
-step's dense cache view from pages (token r of slot b == packed row r), so
-greedy token streams match the dense reference bit-for-bit — the invariant
-`tests/test_paged_serving.py` enforces across the zoo subset. On TPU the
-assembly is the page-indexed PUL gather (`kernels.pul_page_gather`, enabled
-with ``use_pallas_gather=True``) and the attention itself can consume pages
-directly (`kernels.pul_paged_decode_attention`).
+Decode runs one of two equivalent paths:
+
+  * **assembly** (default): each step's dense cache view is rebuilt from
+    pages (token r of slot b == packed row r) — optionally through the
+    page-indexed PUL gather (``use_pallas_gather=True``) — then decoded as
+    usual; greedy token streams match the dense reference bit-for-bit, the
+    invariant `tests/test_paged_serving.py` enforces. Kept as the oracle.
+  * **kernel-true** (``use_paged_kernel=True``): attention streams straight
+    over the page frames (`kernels.pul_paged_decode_attention`, or the MLA
+    variant over compressed pages), the page table acting as the preload
+    trace; the current token's K/V merges into the online softmax in-kernel
+    and is scattered into its tail page afterwards. No dense per-slot view
+    is ever materialized — the serving realization of the paper's claim.
+
+Fully-shared prompts are cheaper still: when a request's whole page-aligned
+prompt already lives in shared pages, admission refs the pages and replays
+the cached first-token logits — zero prefill compute (`prefill_skips`).
 
 MoE caveat: capacity-factor dispatch mixes tokens across the batch, so MoE
 archs serve fine but are not bitwise batch-size-invariant; the differential
@@ -30,7 +40,9 @@ zoo subset uses dense archs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -45,6 +57,7 @@ from repro.serving.kv_pages import (
     PageConfig,
     TRASH_FRAME,
     ZERO_FRAME,
+    _path_keys,
 )
 from repro.serving.scheduler import (
     Admission,
@@ -52,6 +65,15 @@ from repro.serving.scheduler import (
     Request,
     SchedulerConfig,
 )
+
+
+def _drain_results(requests: Dict[int, Request]) -> Dict[int, List[int]]:
+    """Collect every tracked request's output and prune the completed ones
+    (a long-lived engine must not accumulate historical requests)."""
+    out = {rid: r.out_tokens for rid, r in requests.items()}
+    for rid in [rid for rid, r in requests.items() if r.done]:
+        del requests[rid]
+    return out
 
 
 # ========================================================================== #
@@ -63,6 +85,10 @@ class EngineConfig:
     max_seq: int = 256
     prefill_bucket: int = 64
     greedy: bool = True
+    sample_seed: int = 0            # rng seed for greedy=False sampling
+                                    # (mirrors PagedEngineConfig.sample_seed
+                                    # so sampling runs are differential-
+                                    # testable across the two engines)
 
 
 class ServingEngine:
@@ -82,10 +108,12 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * B
         self.slot_pos: np.ndarray = np.zeros((B,), np.int32)  # next position
         self.queue: List[Request] = []
-        self._rng = np.random.default_rng(0)
+        self.requests: Dict[int, Request] = {}   # every request ever submitted
+        self._rng = np.random.default_rng(engine_cfg.sample_seed)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request):
+        self.requests[req.rid] = req
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
@@ -152,16 +180,16 @@ class ServingEngine:
         self._emit(np.asarray(logits))
 
     def run(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
-        done: Dict[int, List[int]] = {}
+        """Drive steps until every tracked request completes (or the tick
+        cap); returns {rid: generated tokens} for ALL submitted requests —
+        including those already admitted into slots before run() was called
+        (a queue-only snapshot would silently drop their outputs)."""
         ticks = 0
         pending = lambda: self.queue or any(r is not None for r in self.slot_req)
-        submitted = {r.rid: r for r in self.queue}
         while pending() and ticks < max_ticks:
             self.step()
             ticks += 1
-        for rid, r in submitted.items():
-            done[rid] = r.out_tokens
-        return done
+        return _drain_results(self.requests)
 
 
 # ========================================================================== #
@@ -178,6 +206,10 @@ class PagedEngineConfig:
     preload_distance: Optional[int] = None   # None -> planner d*
     share_prefix_pages: bool = True
     use_pallas_gather: bool = False  # route page assembly through pul_gather
+    use_paged_kernel: bool = False   # kernel-true decode: attention streams
+                                     # straight over pages (no dense assembly);
+                                     # False keeps assemble-then-attend as the
+                                     # oracle path
     greedy: bool = True
     sample_seed: int = 0            # rng seed for greedy=False sampling
 
@@ -187,6 +219,7 @@ class EngineMetrics:
     ticks: int = 0
     tokens_emitted: int = 0
     prefills: int = 0
+    prefill_skips: int = 0      # admissions served entirely from shared pages
     decode_steps: int = 0
     wall_time: float = 0.0
 
@@ -229,9 +262,14 @@ class PagedServingEngine:
             max_active_tokens=engine_cfg.max_active_tokens or B * S,
             page_tokens=P))
 
-        # compiled entry points: one prefill per bucket, one decode
+        # compiled entry points: one prefill per bucket, one decode; the
+        # kernel-true path binds the planner's d* as the in-kernel preload
+        # distance (static arg, so it is part of the compiled artifact)
         self._prefill_fns: Dict[int, Callable] = {}
         self._decode = jax.jit(self.model.decode_step)
+        d = max(1, min(self.pool.distance, self.pool.cfg.fifo_depth))
+        self._paged_decode = jax.jit(functools.partial(
+            self.model.paged_decode_step, pul_distance=d))
 
         # slot state
         self.slot_req: List[Optional[Request]] = [None] * B
@@ -246,6 +284,15 @@ class PagedServingEngine:
         self._rng = np.random.default_rng(engine_cfg.sample_seed)
         self._paused_state: Dict[int, Dict[Tuple[str, ...], Any]] = {}
         self._tick = 0
+        # prefill-compute reuse: first-token logits per fully page-aligned
+        # shared prompt, keyed (bucket, prompt tuple); bounded LRU. Only
+        # sound when no non-pageable recurrent state exists (pages rebuild
+        # attention KV exactly; SSM/conv state cannot be rebuilt from pages).
+        pageable = {e.keys for e in self.layout.entries}
+        self._has_recurrent = any(
+            _path_keys(path) not in pageable and _path_keys(path)[-1] != "idx"
+            for path, _ in jax.tree_util.tree_flatten_with_path(spec)[0])
+        self._prompt_logits: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
 
     # ------------------------------------------------------------------ #
     def _prefill_for(self, bucket: int) -> Callable:
@@ -272,9 +319,11 @@ class PagedServingEngine:
                 if r is not None and not self.paused[i]]
 
     def _active_tokens(self) -> int:
-        return sum(self.slot_req[i].bucket + self.slot_req[i].max_new_tokens
-                   for i in range(len(self.slot_req))
-                   if self.slot_req[i] is not None)
+        """Budget charge of the live batch — the SAME cost function the
+        scheduler uses at admission (`AdmissionScheduler.request_cost`), so
+        per-tick accounting can never drift from submit-time checks."""
+        return sum(self.scheduler.request_cost(r)
+                   for r in self.slot_req if r is not None)
 
     def _live_page_count(self) -> int:
         return sum(len(self.slot_pages[i])
@@ -292,9 +341,43 @@ class PagedServingEngine:
             now=self._tick)
         by_bucket: Dict[int, List[Admission]] = {}
         for a in admissions:
+            if self._try_shared_prefill(a):
+                continue                     # served without prefill compute
             by_bucket.setdefault(a.bucket, []).append(a)
         for bucket, group in sorted(by_bucket.items()):
             self._prefill_group(bucket, group)
+
+    def _try_shared_prefill(self, a: Admission) -> bool:
+        """Admit a request whose WHOLE prompt is already resident as shared
+        pages without running prefill compute (ROADMAP prefix-cache compute
+        reuse): every full page of the (bucketed) prompt hits the prefix
+        index and the first-token logits were cached by the prefill that
+        built those pages. Only page-aligned prompts qualify (a partial tail
+        page is private and would still need compute), and only when the
+        model carries no recurrent state (which pages cannot rebuild)."""
+        P = self.cfg.page_tokens
+        prompt = a.request.prompt[-a.bucket:]
+        n = len(prompt)
+        if (not self.cfg.share_prefix_pages or not self.layout.features
+                or self._has_recurrent or n == 0 or n % P):
+            return False
+        key = (a.bucket, tuple(prompt))
+        logits = self._prompt_logits.get(key)
+        if logits is None:
+            return False
+        page_keys = [(a.bucket, tuple(prompt[:(j + 1) * P]))
+                     for j in range(n // P)]
+        if any(k not in self.pool.prefix_index for k in page_keys):
+            return False
+        pids = [self.pool.lookup_shared(k) for k in page_keys]
+        self.slot_req[a.slot] = a.request
+        self.slot_pages[a.slot] = pids
+        self.slot_len[a.slot] = n
+        self.paused[a.slot] = False
+        self.metrics.prefill_skips += 1
+        self._prompt_logits.move_to_end(key)
+        self._emit_token(a.slot, logits)
+        return True
 
     def _prefill_group(self, bucket: int, group: List[Admission]):
         B, P = self.cfg.batch_slots, self.cfg.page_tokens
@@ -313,6 +396,9 @@ class PagedServingEngine:
         packed = (self.layout.pack(caches)
                   if self.layout.features else None)   # (B, bucket, F)
 
+        # pages every live slot (and this admission group so far) still
+        # needs: allocations must not evict them mid-step
+        working = {pid for pages in self.slot_pages for pid in pages}
         for a in group:
             slot, prompt = a.slot, prompts[a.slot]
             n = len(prompt)
@@ -327,17 +413,27 @@ class PagedServingEngine:
                         if pid is None:
                             pid = self.pool.alloc(shared_key=key
                                                   if self.cfg.share_prefix_pages
-                                                  else None)
+                                                  else None,
+                                                  needed=working)
                             self.pool.write_page(pid, packed[slot, lo:hi],
                                                  hi - lo)
                     else:
-                        pid = self.pool.alloc()
+                        pid = self.pool.alloc(needed=working)
                         self.pool.write_page(pid, packed[slot, lo:hi], hi - lo)
                     pids.append(pid)
+                    working.add(pid)
             self.slot_pages[slot] = pids
             self.slot_len[slot] = n
             self.paused[slot] = False
             self._merge_resident(caches, slot)
+            if (self.cfg.share_prefix_pages and self.layout.features
+                    and not self._has_recurrent and n and n % P == 0):
+                # whole prompt landed in shared pages: cache the first-token
+                # logits so an identical prompt can skip prefill entirely
+                self._prompt_logits[(bucket, tuple(prompt))] = \
+                    np.asarray(logits[slot])
+                if len(self._prompt_logits) > 512:
+                    self._prompt_logits.popitem(last=False)
             self._emit_token(slot, np.asarray(logits[slot]))
 
     def _merge_resident(self, fresh, slot: int):
@@ -348,7 +444,7 @@ class PagedServingEngine:
         flat_fresh = dict(jax.tree_util.tree_flatten_with_path(fresh)[0])
         out = []
         for path, leaf in flat:
-            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            keys = _path_keys(path)
             if keys in pageable:
                 out.append(leaf)
                 continue
@@ -367,7 +463,7 @@ class PagedServingEngine:
         vec = jnp.asarray(idx, jnp.int32)
         out = []
         for path, leaf in flat:
-            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            keys = _path_keys(path)
             if keys[-1] == "idx":
                 leaf = jnp.broadcast_to(vec, leaf.shape).astype(leaf.dtype)
             out.append(leaf)
@@ -396,12 +492,49 @@ class PagedServingEngine:
         return self._set_idx(tree, self.slot_len)
 
     def _ensure_tail_pages(self):
-        """Every live slot needs a writable page for the incoming token."""
+        """Every live slot needs a writable page for the incoming token.
+        The step's whole working set is threaded into alloc so a tail-page
+        allocation can never evict a page this very step still reads (which
+        ensure_hot would immediately restore — churn, not capacity)."""
         P = self.cfg.page_tokens
-        for i in self._live_slots():
+        live = self._live_slots()
+        working = {pid for i in live for pid in self.slot_pages[i]}
+        for i in live:
             pos = int(self.slot_len[i])
             if pos // P == len(self.slot_pages[i]):
-                self.slot_pages[i].append(self.pool.alloc())
+                pid = self.pool.alloc(needed=working)
+                self.slot_pages[i].append(pid)
+                working.add(pid)
+
+    def _paged_kernel_decode(self, live, toks, pos0):
+        """Kernel-true decode: attention streams straight over page frames
+        (`pul_paged_decode_attention` / the MLA variant); no dense per-slot
+        KV view is assembled. Returns (logits, new_tree) where new_tree's
+        pageable leaves hold only the current token's rows."""
+        B = self.cfg.batch_slots
+        page_table = np.full((B, self.n_pages_per_slot), ZERO_FRAME, np.int32)
+        for i in live:
+            pids = self.slot_pages[i]
+            page_table[i, :len(pids)] = self.pool.frames_of(pids)
+        tree = self.layout.page_views(self.resident, self.pool.store)
+        tree = self._set_idx(tree, self.slot_len)
+        return self._paged_decode(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "pos0": jnp.asarray(pos0),
+                          "page_table": jnp.asarray(page_table)}, tree)
+
+    def _merge_nonpageable(self, new_tree):
+        """Fold a paged-decode step's NON-pageable outputs (SSM state, idx)
+        into the resident tree; pageable leaves (page views in, new-token
+        rows out) never live in `resident`."""
+        pageable = {e.keys for e in self.layout.entries}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.resident)
+        flat_new = dict(jax.tree_util.tree_flatten_with_path(new_tree)[0])
+        out = []
+        for path, leaf in flat:
+            keys = _path_keys(path)
+            out.append(leaf if keys in pageable else flat_new[path])
+        self.resident = jax.tree_util.tree_unflatten(treedef, out)
 
     def _decode_step(self):
         live = self._live_slots()
@@ -417,16 +550,22 @@ class PagedServingEngine:
         for i in live:
             toks[i, 0] = self.slot_req[i].out_tokens[-1]
             pos0[i] = self.slot_len[i]
-        tree = self._assemble()
-        logits, new_tree = self._decode(
-            self.params, {"tokens": jnp.asarray(toks),
-                          "pos0": jnp.asarray(pos0)}, tree)
+        kernel_true = self.cfg.use_paged_kernel and self.layout.features
+        if kernel_true:
+            logits, new_tree = self._paged_kernel_decode(live, toks, pos0)
+        else:
+            tree = self._assemble()
+            logits, new_tree = self._decode(
+                self.params, {"tokens": jnp.asarray(toks),
+                              "pos0": jnp.asarray(pos0)}, tree)
         self.metrics.decode_steps += 1
 
         # write the step's new KV rows back into each live slot's tail page
         if self.layout.features:
             P = self.cfg.page_tokens
-            rows = self.layout.pack_rows(new_tree, jnp.asarray(self.slot_len))
+            rows = (self.layout.pack_new_rows(new_tree) if kernel_true
+                    else self.layout.pack_rows(new_tree,
+                                               jnp.asarray(self.slot_len)))
             frames = np.full((B,), TRASH_FRAME, np.int32)
             offs = np.zeros((B,), np.int32)
             for i in live:
@@ -435,7 +574,10 @@ class PagedServingEngine:
                 frames[i] = self.pool.pages[pid].frame
                 offs[i] = pos % P
             self.pool.write_rows(frames, offs, rows)
-        self.resident = new_tree
+        if kernel_true:
+            self._merge_nonpageable(new_tree)
+        else:
+            self.resident = new_tree
 
         logits = np.asarray(logits)
         for i in live:
@@ -478,7 +620,7 @@ class PagedServingEngine:
         pageable = {e.keys for e in self.layout.entries}
         out = {}
         for path, leaf in jax.tree_util.tree_flatten_with_path(self.resident)[0]:
-            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            keys = _path_keys(path)
             if keys in pageable or keys[-1] == "idx":
                 continue
             ax = 1 if keys[0] == "groups" else 0
@@ -490,7 +632,7 @@ class PagedServingEngine:
         flat, treedef = jax.tree_util.tree_flatten_with_path(self.resident)
         out = []
         for path, leaf in flat:
-            keys = tuple(getattr(p, "key", str(p)) for p in path)
+            keys = _path_keys(path)
             if keys in saved:
                 ax = 1 if keys[0] == "groups" else 0
                 idx = (slice(None),) * ax + (slot,)
@@ -539,6 +681,8 @@ class PagedServingEngine:
             "tick": self._tick,
             "tokens_emitted": self.metrics.tokens_emitted,
             "tokens_per_sec": self.metrics.tokens_per_sec,
+            "prefills": self.metrics.prefills,
+            "prefill_skips": self.metrics.prefill_skips,
             "live_slots": len(self._live_slots()),
             "queued": len(self.scheduler),
             "page_faults": pm.page_faults,
@@ -562,4 +706,4 @@ class PagedServingEngine:
         while pending() and ticks < max_ticks:
             self.step()
             ticks += 1
-        return {rid: r.out_tokens for rid, r in self.requests.items()}
+        return _drain_results(self.requests)

@@ -133,6 +133,50 @@ class PackedKVLayout:
                 outs.append(leaf[rows, i].reshape(B, -1))
         return jnp.concatenate(outs, axis=-1)
 
+    def pack_new_rows(self, tree) -> jnp.ndarray:
+        """Pack a paged-decode output tree's NEW-TOKEN rows into (B, F).
+
+        `tree` is the tree returned by the kernel-true paged decode: every
+        pageable leaf holds only the current token's features — grouped
+        (G, B, feat...) or ungrouped (B, feat...) — in the same entry order
+        as `pack`, so the result scatters straight into tail pages."""
+        outs = []
+        for e in self.entries:
+            leaf = self._get(tree, e.keys)
+            if e.grouped:
+                B = leaf.shape[1]
+                outs.append(jnp.moveaxis(leaf, 0, 1).reshape(B, -1))
+            else:
+                outs.append(leaf.reshape(leaf.shape[0], -1))
+        return jnp.concatenate(outs, axis=-1)
+
+    def page_views(self, tree, store: jnp.ndarray):
+        """Return `tree` with every pageable leaf replaced by a kernel-
+        addressable view of the physical page `store` ((NP, P, F)).
+
+        Attention leaves ((..., S, K, hd) dense) become (..., NP, K, P, hd)
+        page frames — the layout `pul_paged_decode_attention` consumes; MLA
+        leaves ((..., S, kvr) head-shared) become (..., NP, P, kvr) for
+        `pul_paged_mla_decode_attention`. Grouped entries keep their leading
+        scan axis. Non-pageable leaves (SSM state, idx) pass through."""
+        NP, P, _ = store.shape
+        new = jax.tree_util.tree_map(lambda x: x, tree)
+        for e in self.entries:
+            cols = store[:, :, e.offset:e.offset + e.nfeat]   # (NP, P, nfeat)
+            feat = e.shape[3:] if e.grouped else e.shape[2:]
+            if e.grouped:
+                G = e.shape[0]
+                view = jnp.moveaxis(cols.reshape(NP, P, G, *feat), 2, 0)
+            else:
+                view = cols.reshape(NP, P, *feat)
+            if len(feat) == 2:              # (K, hd) -> pages (.., NP, K, P, hd)
+                view = jnp.swapaxes(view, -3, -2)
+            node = new
+            for k in e.keys[:-1]:
+                node = node[k]
+            node[e.keys[-1]] = view
+        return new
+
     def unpack_into(self, tree, packed: jnp.ndarray):
         """Return `tree` with every pageable leaf replaced from `packed`
         ((B, S, F)); non-pageable leaves (SSM states, idx) pass through."""
@@ -253,11 +297,16 @@ class KVPagePool:
     def tick(self):
         self._clock += 1
 
-    def alloc(self, shared_key: Optional[tuple] = None) -> int:
-        """Allocate a fresh page in the hot tier; returns its page id."""
+    def alloc(self, shared_key: Optional[tuple] = None, *,
+              needed: Sequence[int] = ()) -> int:
+        """Allocate a fresh page in the hot tier; returns its page id.
+
+        `needed` is the caller's CURRENT working set (page ids the ongoing
+        step still has to read): frame stealing will never evict them, so an
+        allocation can't trigger a same-step fault/restore round-trip."""
         pid = self._next_id
         self._next_id += 1
-        frame = self._take_frame(needed=())
+        frame = self._take_frame(needed=needed)
         self.pages[pid] = _PageMeta(frame=frame, last_used=self._clock,
                                     shared_key=shared_key)
         if shared_key is not None:
@@ -385,8 +434,9 @@ class KVPagePool:
                    rows: jnp.ndarray):
         """Scatter one packed row per slot into (frame, offset) positions.
         Inactive slots should point at TRASH_FRAME."""
+        # validate BEFORE the scatter: the reserved zero frame backs every
+        # unallocated page-table slot and must stay all-zeros
+        assert ZERO_FRAME not in frames.tolist(), "write to the zero frame"
         self.store = self.store.at[
             jnp.asarray(frames), jnp.asarray(offsets)].set(
                 rows.astype(self.dtype))
-        # keep the reserved zero frame all-zeros even if misused
-        assert ZERO_FRAME not in frames.tolist(), "write to the zero frame"

@@ -64,7 +64,10 @@ class AdmissionScheduler:
     def __init__(self, cfg: SchedulerConfig):
         self.cfg = cfg
         self.queue: List[Request] = []
-        self.admitted: List[Request] = []
+        # latency VALUES, not Request objects: admitted requests must not be
+        # retained here forever (prompt/out_tokens would leak in a
+        # long-lived engine)
+        self._latencies: List[int] = []
 
     def __len__(self) -> int:
         return len(self.queue)
@@ -81,7 +84,12 @@ class AdmissionScheduler:
         return self.cfg.prefill_buckets[-1]
 
     def request_cost(self, req: Request) -> int:
-        """Worst-case final token count (budget unit)."""
+        """Worst-case final token count (budget unit).
+
+        THE cost function of the token budget: submit-time rejection,
+        admission, and the engine's per-tick accounting
+        (`PagedServingEngine._active_tokens`) all charge this — one
+        definition, so the budget can never drift between checks."""
         bucket = self.pick_bucket(len(req.prompt))
         return min(len(req.prompt), bucket) + req.max_new_tokens
 
@@ -123,9 +131,9 @@ class AdmissionScheduler:
             frames -= pages
             slot = free.pop(0)
             out.append(Admission(slot=slot, request=req, bucket=req.bucket))
-            self.admitted.append(req)
+            self._latencies.append(req.queue_latency)
         return out
 
     # ------------------------------------------------------------------ #
     def queue_latencies(self) -> List[int]:
-        return [r.queue_latency for r in self.admitted if r.queue_latency >= 0]
+        return [l for l in self._latencies if l >= 0]

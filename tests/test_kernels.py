@@ -15,9 +15,12 @@ from repro.kernels import (
     pul_matmul,
     pul_page_gather,
     pul_paged_decode_attention,
+    pul_paged_mla_decode_attention,
     pul_sum,
     ref,
 )
+
+pytestmark = pytest.mark.kernels
 
 KEY = jax.random.PRNGKey(0)
 
@@ -172,6 +175,97 @@ def test_pul_paged_decode_attention(gqa, distance):
     want = ref.decode_attention_ref(q, kd, vd, lengths)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("window", [None, 11, 24])
+@pytest.mark.parametrize("softcap", [None, 8.0])
+def test_pul_paged_decode_attention_window_and_self_merge(window, softcap):
+    """Sliding-window masking + current-token (k_new, v_new) merge: the
+    kernel over scattered pages == dense oracle over [assembled cache ;
+    current token], with the window anchored at the query position."""
+    B, K, P, npg, hd, gqa = 2, 2, 8, 4, 16, 2
+    H, S, NP = K * gqa, P * npg, 9
+    kp = _rand(jax.random.PRNGKey(1), (NP, K, P, hd), jnp.float32) * 0.4
+    vp = _rand(jax.random.PRNGKey(2), (NP, K, P, hd), jnp.float32)
+    kn = _rand(jax.random.PRNGKey(3), (B, K, hd), jnp.float32) * 0.4
+    vn = _rand(jax.random.PRNGKey(4), (B, K, hd), jnp.float32)
+    q = _rand(jax.random.PRNGKey(5), (B, H, hd), jnp.float32) * 0.4
+    pt = jnp.asarray(np.random.default_rng(0).permutation(NP)[:B * npg]
+                     .reshape(B, npg) % NP, jnp.int32)
+    lengths = jnp.asarray([S - 2, 13], jnp.int32)
+    got = pul_paged_decode_attention(q, kp, vp, pt, lengths,
+                                     cfg=PULConfig(distance=2),
+                                     softcap=softcap, window=window,
+                                     k_new=kn, v_new=vn)
+    # oracle: assembled dense cache + current token appended at position len
+    kd = kp[pt].transpose(0, 2, 1, 3, 4).reshape(B, K, S, hd)
+    vd = vp[pt].transpose(0, 2, 1, 3, 4).reshape(B, K, S, hd)
+    kk = jnp.repeat(jnp.concatenate([kd, kn[:, :, None]], 2), gqa, 1)
+    vv = jnp.repeat(jnp.concatenate([vd, vn[:, :, None]], 2), gqa, 1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q, kk) / (hd ** 0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    jk = jnp.arange(S + 1)[None, None, :]
+    L = lengths[:, None, None]
+    msk = (jk < L) | (jk == S)                    # cached rows + current token
+    if window is not None:
+        # query sits at absolute position L; the current token (logical
+        # position L, stored at column S) is always inside the window
+        msk &= (jk > L - window) | (jk == S)
+    logits = jnp.where(msk, logits, -2.0e38)
+    p = jax.nn.softmax(logits, axis=-1)
+    want = jnp.einsum("bhs,bhsd->bhd", p, vv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("distance", [1, 3])
+def test_pul_paged_mla_decode_attention(distance):
+    """Absorbed MLA decode over compressed-KV pages == dense oracle (the
+    compressed cache doubles as the value stream), mixed fill levels."""
+    B, H, kvr, dr, P, npg, NP = 2, 4, 32, 8, 8, 4, 11
+    S = P * npg
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    qa = _rand(ks[0], (B, H, kvr), jnp.float32) * 0.4
+    qr = _rand(ks[1], (B, H, dr), jnp.float32) * 0.4
+    cp = _rand(ks[2], (NP, P, kvr), jnp.float32) * 0.4
+    rp = _rand(ks[3], (NP, P, dr), jnp.float32) * 0.4
+    cn = _rand(ks[4], (B, kvr), jnp.float32) * 0.4
+    rn = _rand(ks[5], (B, dr), jnp.float32) * 0.4
+    pt = jnp.asarray(np.random.default_rng(1).permutation(NP)[:B * npg]
+                     .reshape(B, npg), jnp.int32)
+    lengths = jnp.asarray([S, 11], jnp.int32)
+    scale = 1.0 / (kvr + dr) ** 0.5
+    got = pul_paged_mla_decode_attention(qa, qr, cp, rp, pt, lengths, cn, rn,
+                                         scale=scale,
+                                         cfg=PULConfig(distance=distance))
+    cd = jnp.concatenate([cp[pt].reshape(B, S, kvr), cn[:, None]], 1)
+    rd = jnp.concatenate([rp[pt].reshape(B, S, dr), rn[:, None]], 1)
+    logits = (jnp.einsum("bhr,bsr->bhs", qa, cd)
+              + jnp.einsum("bhd,bsd->bhs", qr, rd)) * scale
+    jk = jnp.arange(S + 1)[None, None, :]
+    msk = (jk < lengths[:, None, None]) | (jk == S)
+    logits = jnp.where(msk, logits, -2.0e38)
+    p = jax.nn.softmax(logits, axis=-1)
+    want = jnp.einsum("bhs,bsr->bhr", p, cd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_pul_paged_decode_attention_empty_cache():
+    """length 0: only the current token is visible (empty-prompt decode)."""
+    B, K, P, npg, hd = 1, 2, 8, 2, 16
+    kp = _rand(jax.random.PRNGKey(1), (3, K, P, hd), jnp.float32)
+    vp = _rand(jax.random.PRNGKey(2), (3, K, P, hd), jnp.float32)
+    kn = _rand(jax.random.PRNGKey(3), (B, K, hd), jnp.float32)
+    vn = _rand(jax.random.PRNGKey(4), (B, K, hd), jnp.float32)
+    q = _rand(jax.random.PRNGKey(5), (B, K, hd), jnp.float32)
+    pt = jnp.zeros((B, npg), jnp.int32)
+    got = pul_paged_decode_attention(q, kp, vp, pt, jnp.zeros((B,), jnp.int32),
+                                     k_new=kn, v_new=vn)
+    # softmax over a single visible position == v_new itself
+    np.testing.assert_allclose(np.asarray(got), np.asarray(vn),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------- decode attention

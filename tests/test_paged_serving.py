@@ -307,6 +307,233 @@ def test_sampling_uses_model_distribution():
 
 
 # --------------------------------------------------------------------------
+# kernel-true paged decode (use_paged_kernel=True): attention streams
+# straight over page frames — no dense per-slot KV view is ever assembled
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,sizes", [
+    ("qwen3-1.7b", (3, 17, 8)),          # GQA + qk_norm
+    ("gemma2-27b", (3, 17, 40)),         # sliding window + softcap
+    ("qwen2.5-32b", (3, 17, 8)),         # GQA + qkv bias
+])
+def test_paged_kernel_decode_matches_dense_reference(arch, sizes):
+    """With use_paged_kernel=True, greedy token streams are identical to the
+    dense-cache reference: mixed prompt lengths, mid-stream slot refills,
+    partial tail pages, and window wrap (gemma2's 40 > window 16)."""
+    cfg, model, params = _model(arch)
+    buckets = (8, 16, 32)
+    eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+        batch_slots=2, max_seq=64, page_tokens=8, prefill_buckets=buckets,
+        use_paged_kernel=True))
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).tolist()
+               for n in sizes]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    got = eng.run()
+    assert eng.metrics.prefills >= 2     # slots refilled mid-stream
+    for i, p in enumerate(prompts):
+        want = dense_reference(model, params, p, 6,
+                               _pick_bucket(buckets, len(p)),
+                               B=2, max_seq=64)
+        assert got[i] == want, f"{arch} req {i}: {got[i]} != {want}"
+
+
+def test_paged_kernel_mla_matches_dense_reference():
+    """MLA (deepseek): absorbed decode straight over compressed-KV pages is
+    token-identical to the dense reference. Single-request runs keep the
+    batch composition identical (MoE capacity dispatch is composition-
+    sensitive); lengths cover multi-page, sub-page, and partial tails."""
+    cfg = get_config("deepseek-v2-236b").reduced()
+    model = build_model(dataclasses.replace(cfg, paged_kv=True))
+    params = model.init(jax.random.PRNGKey(0))
+    buckets = (8, 16, 32)
+    for seed, plen in ((2, 19), (3, 5), (7, 13)):
+        p = np.random.default_rng(seed).integers(
+            1, cfg.vocab_size, size=plen).tolist()
+        eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+            batch_slots=2, max_seq=64, page_tokens=8,
+            prefill_buckets=buckets, use_paged_kernel=True))
+        eng.submit(Request(rid=0, prompt=list(p), max_new_tokens=10))
+        got = eng.run()[0]
+        want = dense_reference(model, params, p, 10,
+                               _pick_bucket(buckets, plen), B=2, max_seq=64)
+        assert got == want, f"len {plen}: {got} != {want}"
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_empty_prompt_admission(use_kernel):
+    """Empty-prompt requests admit cleanly (no pages at prefill, tail page
+    on the first decode step) and match the dense reference, on both the
+    assembly and the kernel-true decode paths."""
+    cfg, model, params = _model("qwen3-1.7b")
+    eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+        batch_slots=2, max_seq=32, page_tokens=8, prefill_buckets=(8,),
+        use_paged_kernel=use_kernel))
+    eng.submit(Request(rid=0, prompt=[], max_new_tokens=5))
+    got = eng.run()[0]
+    assert len(got) == 5
+    want = dense_reference(model, params, [], 5, 8, B=2, max_seq=32)
+    assert got == want
+
+
+# --------------------------------------------------------------------------
+# prefix-cache COMPUTE reuse: fully-shared prompts skip prefill entirely
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_fully_shared_prompt_skips_prefill_compute(use_kernel):
+    """A request whose whole (page-aligned) prompt is already resident as
+    shared pages admits with ZERO prefill compute: the prefill counter is
+    unchanged, the shared pages are ref'd, and the stream is identical to
+    an undisturbed solo run — on both decode paths."""
+    cfg, model, params = _model("qwen3-1.7b")
+    prompt = list(range(5, 21))                     # 16 tokens = 2 full pages
+    ecfg = dict(batch_slots=2, max_seq=64, page_tokens=8,
+                prefill_buckets=(16,), use_paged_kernel=use_kernel)
+    eng = PagedServingEngine(cfg, params, PagedEngineConfig(**ecfg))
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=12))
+    for _ in range(3):
+        eng.step()
+    assert eng.metrics.prefills == 1
+    eng.submit(Request(rid=1, prompt=list(prompt), max_new_tokens=12))
+    eng.step()                                      # admitted from shared pages
+    assert eng.metrics.prefills == 1                # ZERO additional compute
+    assert eng.metrics.prefill_skips == 1
+    assert eng.pool.metrics.shared_hits == 2        # both prompt pages reused
+    out = eng.run()
+
+    solo = PagedServingEngine(cfg, params, PagedEngineConfig(**ecfg))
+    solo.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=12))
+    want = solo.run()[0]
+    assert out[0] == want and out[1] == want
+
+    # non-page-aligned prompts never skip (the partial tail needs compute)
+    eng2 = PagedServingEngine(cfg, params, PagedEngineConfig(
+        batch_slots=2, max_seq=64, page_tokens=8, prefill_buckets=(16,)))
+    eng2.submit(Request(rid=0, prompt=list(prompt[:-3]), max_new_tokens=12))
+    for _ in range(3):
+        eng2.step()
+    eng2.submit(Request(rid=1, prompt=list(prompt[:-3]), max_new_tokens=4))
+    eng2.run()
+    assert eng2.metrics.prefill_skips == 0
+    assert eng2.metrics.prefills == 2
+
+
+def test_recurrent_archs_never_skip_prefill():
+    """Hybrid (SSM) archs carry non-pageable state that pages cannot
+    rebuild: identical prompts must still prefill."""
+    cfg = get_config("zamba2-7b").reduced()
+    model = build_model(dataclasses.replace(cfg, paged_kv=True))
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = list(range(1, 17))                     # page-aligned on purpose
+    eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+        batch_slots=2, max_seq=64, page_tokens=8, prefill_buckets=(16,)))
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=10))
+    for _ in range(3):
+        eng.step()
+    eng.submit(Request(rid=1, prompt=list(prompt), max_new_tokens=4))
+    out = eng.run()
+    assert eng.metrics.prefill_skips == 0
+    assert eng.metrics.prefills == 2
+    assert out[0][:4] == out[1][:4]                 # same prompt, same start
+
+
+# --------------------------------------------------------------------------
+# admission-accounting regressions
+# --------------------------------------------------------------------------
+def test_token_budget_accounting_matches_scheduler_cost():
+    """Regression: the engine's per-tick active-token charge must be the
+    scheduler's request_cost (min(prompt, bucket) + max_new), not
+    bucket + max_new — otherwise a short prompt in a large bucket inflates
+    the budget between submit-time checks and per-tick accounting, blocking
+    admissions the scheduler already proved feasible."""
+    cfg, model, params = _model("qwen3-1.7b")
+    # cost per request = min(3, 16) + 6 = 9; two fit in budget 18. The
+    # drifted charge (16 + 6 = 22) would block the second request forever.
+    eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+        batch_slots=2, max_seq=64, page_tokens=8, prefill_buckets=(16,),
+        max_active_tokens=18))
+    r0 = Request(rid=0, prompt=[3, 1, 4], max_new_tokens=6)
+    r1 = Request(rid=1, prompt=[1, 5, 9], max_new_tokens=6)
+    eng.submit(r0)
+    eng.step()
+    assert eng._active_tokens() == 9
+    eng.submit(r1)
+    eng.step()
+    assert r1.admit_tick == 1           # admitted immediately, not serialized
+    assert eng._active_tokens() == 18
+    eng.run()
+    assert len(r0.out_tokens) == 6 and len(r1.out_tokens) == 6
+
+
+def test_dense_run_returns_preadmitted_requests():
+    """Regression: ServingEngine.run() must return requests that were
+    already admitted into slots before run() was called (the old queue-only
+    snapshot silently dropped their outputs)."""
+    cfg, model, params = _model("qwen3-1.7b")
+    from repro.serving import EngineConfig, ServingEngine
+    eng = ServingEngine(cfg, params, EngineConfig(
+        batch_slots=2, max_seq=64, prefill_bucket=16))
+    eng.submit(Request(rid=0, prompt=[3, 1, 4], max_new_tokens=4))
+    eng.step()                           # rid 0 leaves the queue for a slot
+    eng.submit(Request(rid=1, prompt=[2, 7], max_new_tokens=4))
+    done = eng.run()
+    assert set(done) == {0, 1}
+    assert len(done[0]) == 4 and len(done[1]) == 4
+
+
+def test_pool_alloc_preserves_step_working_set():
+    """Regression: alloc() must not evict pages the current step still
+    needs (stale LRU order made the working set the victim, forcing a
+    same-step fault/restore round-trip that polluted the latency-hidden
+    metric)."""
+    from repro.serving.kv_pages import KVPagePool, PageConfig
+    pool = KVPagePool(PageConfig(page_tokens=8, hot_frames=5), features=4)
+    assert pool.capacity == 3
+    p1, p2, p3 = pool.alloc(), pool.alloc(), pool.alloc()
+    pool.ensure_hot([p2, p3])            # p1 becomes the strict LRU entry
+    pool.alloc(needed=(p1,))             # full pool: someone must spill...
+    assert pool.pages[p1].frame is not None   # ...but never the working set
+    assert pool.metrics.evictions == 1
+    assert pool.metrics.page_faults == 0      # no same-step churn
+
+
+def test_write_rows_validates_before_scatter():
+    """Regression: the zero-frame invariant is checked BEFORE the scatter —
+    a bad frame vector must leave the reserved all-zeros frame untouched."""
+    from repro.serving.kv_pages import KVPagePool, PageConfig, ZERO_FRAME
+    import jax.numpy as jnp
+    pool = KVPagePool(PageConfig(page_tokens=8, hot_frames=4), features=4)
+    with pytest.raises(AssertionError):
+        pool.write_rows(np.asarray([ZERO_FRAME], np.int32),
+                        np.asarray([0], np.int32),
+                        jnp.ones((1, 4), jnp.float32))
+    assert not np.asarray(pool.store[ZERO_FRAME]).any()   # still all-zeros
+
+
+def test_sampling_differential_across_engines():
+    """greedy=False with one shared sample_seed: the dense and paged
+    engines draw identical streams (prompt length == bucket keeps the two
+    prefill paddings — left vs right — bitwise equivalent)."""
+    cfg, model, params = _model("qwen3-1.7b")
+    from repro.serving import EngineConfig, ServingEngine
+    prompt = list(range(3, 19))                    # 16 tokens == the bucket
+    outs = []
+    for seed in (0, 7):
+        dense = ServingEngine(cfg, params, EngineConfig(
+            batch_slots=2, max_seq=64, prefill_bucket=16, greedy=False,
+            sample_seed=seed))
+        paged = PagedServingEngine(cfg, params, PagedEngineConfig(
+            batch_slots=2, max_seq=64, page_tokens=8, prefill_buckets=(16,),
+            greedy=False, sample_seed=seed))
+        for eng in (dense, paged):
+            eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=8))
+        a, b = dense.run()[0], paged.run()[0]
+        assert a == b, f"seed {seed}: {a} != {b}"
+        outs.append(a)
+    assert outs[0] != outs[1]                      # seed actually matters
+
+
+# --------------------------------------------------------------------------
 # Pallas page-gather assembly path
 # --------------------------------------------------------------------------
 def test_pallas_page_gather_assembly_matches_default():
