@@ -1,0 +1,250 @@
+"""Serving-policy SLO benchmark: fcfs vs priority vs slo-edf.
+
+  PYTHONPATH=src python benchmarks/serving_slo.py [--arch qwen3-1.7b]
+      [--steps 64] [--out BENCH_serving.json]
+      [--baseline benchmarks/baselines/serving.json]
+
+Runs the SAME mixed workload through the paged serving engine once per
+scheduling policy: two long low-priority decoders grab both slots first,
+then three short high-priority requests (tight TTFT deadline, in ticks)
+arrive behind them. Under ``fcfs`` the shorts head-of-line-block until the
+longs drain — every deadline blows. ``priority`` preempts a long per short
+immediately; ``slo-edf`` preempts only the requests whose deadline the
+lookahead says cannot be met by waiting. Preempted requests swap out to the
+cold tier and later resume mid-decode (their restores are the page-fault /
+eviction counts below) — the serving-layer analogue of the paper's point:
+knowing WHICH pages to move EARLY enough is what hides the latency.
+
+Emits the ``BENCH_serving.json`` contract (per-policy throughput,
+preemption counts, TTFT percentiles in ticks, high-priority violation
+counts, and a gate vs ``benchmarks/baselines/serving.json``) and exits
+non-zero if the contract or the gate fails, so CI can enforce both.
+
+Contract (hard-asserted):
+  * every policy finishes the full workload (identical token totals);
+  * fcfs has >= 1 high-priority SLO violation, priority and slo-edf have 0;
+  * slo-edf's high-priority TTFT p99 is STRICTLY better than fcfs's;
+  * the baseline gate passes (throughput floor, TTFT-p99 ceiling).
+"""
+import os
+import sys
+sys.path.insert(0, "src")
+
+# pin CPU-backend threading before jax loads (same rationale as
+# tests/conftest.py: keep token streams and tick counts deterministic)
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+if "--xla_cpu_multi_thread_eigen" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_multi_thread_eigen=false").strip()
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (
+    POLICIES,
+    PagedEngineConfig,
+    PagedServingEngine,
+    Request,
+    mean,
+    percentile,
+)
+
+# tiny-config workload: small enough for the CPU CI job, adversarial
+# enough that fcfs provably blows every short request's deadline
+WORKLOAD = dict(
+    slots=2, max_seq=64, page_tokens=8, buckets=(8, 16, 32),
+    long_requests=2, long_prompt=24, long_new=18,
+    short_requests=3, short_prompt=6, short_new=4,
+    ttft_deadline=6,
+    warmup_ticks=2,        # longs decode this many ticks before shorts land
+)
+
+
+def _prompts(vocab):
+    rng = np.random.default_rng(1234)
+    longs = [rng.integers(1, vocab, size=WORKLOAD["long_prompt"]).tolist()
+             for _ in range(WORKLOAD["long_requests"])]
+    shorts = [rng.integers(1, vocab, size=WORKLOAD["short_prompt"]).tolist()
+              for _ in range(WORKLOAD["short_requests"])]
+    return longs, shorts
+
+
+def run_policy(cfg, params, policy, steps):
+    w = WORKLOAD
+    eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+        batch_slots=w["slots"], max_seq=w["max_seq"],
+        page_tokens=w["page_tokens"], prefill_buckets=w["buckets"],
+        policy=policy))
+    longs, shorts = _prompts(cfg.vocab_size)
+    for i, p in enumerate(longs):
+        eng.submit(Request(rid=i, prompt=list(p),
+                           max_new_tokens=w["long_new"], priority=0))
+    for _ in range(w["warmup_ticks"]):
+        eng.step()
+    hi_reqs = []
+    for j, p in enumerate(shorts):
+        r = Request(rid=100 + j, prompt=list(p),
+                    max_new_tokens=w["short_new"], priority=1,
+                    ttft_deadline=w["ttft_deadline"])
+        hi_reqs.append(r)
+        eng.submit(r)
+    all_reqs = list(eng.requests.values())
+    t0 = time.perf_counter()
+    eng.run(max_ticks=steps)
+    wall = time.perf_counter() - t0
+
+    m, pm = eng.metrics, eng.pool.metrics
+    ttfts = [r.ttft for r in all_reqs if r.ttft >= 0]
+    hi_ttfts = [r.ttft for r in hi_reqs]
+    assert all(t >= 0 for t in hi_ttfts), \
+        f"{policy}: a high-priority request never emitted its first token"
+    expected = (w["long_requests"] * w["long_new"]
+                + w["short_requests"] * w["short_new"])
+    assert m.tokens_emitted == expected, \
+        f"{policy}: emitted {m.tokens_emitted}, expected {expected}"
+    return {
+        "policy": policy,
+        "wall_time_s": wall,
+        "ticks": m.ticks,
+        "tokens_emitted": m.tokens_emitted,
+        "tokens_per_sec": m.tokens_emitted / wall if wall > 0 else 0.0,
+        "prefills": m.prefills,
+        "preemptions": m.preemptions,
+        "readmissions": m.readmissions,
+        "slo_violations": m.slo_violations,
+        "page_faults": pm.page_faults,
+        "evictions": pm.evictions,
+        "mean_queue_latency_ticks": mean(eng.scheduler.queue_latencies()),
+        "ttft_p50_ticks": percentile(ttfts, 50),
+        "ttft_p99_ticks": percentile(ttfts, 99),
+        "high_priority": {
+            "ttft_ticks": hi_ttfts,
+            "ttft_p50_ticks": percentile(hi_ttfts, 50),
+            "ttft_p99_ticks": percentile(hi_ttfts, 99),
+            "violations": sum(1 for t in hi_ttfts
+                              if t > WORKLOAD["ttft_deadline"]),
+        },
+    }
+
+
+def evaluate_gate(policies, baseline_path):
+    """Gate the slo-edf run against checked-in floors/ceilings.
+
+    tokens_per_sec passes when measured >= baseline / threshold (a
+    threshold-x slack throughput floor — CI machines are slow and shared);
+    TTFT p99 passes when measured <= baseline * threshold (a latency
+    ceiling). Tick-derived numbers are deterministic; only wall-clock
+    throughput needs the wide slack.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    edf = policies["slo-edf"]
+    checks = []
+    spec = base["tokens_per_sec"]
+    checks.append({
+        "metric": "tokens_per_sec",
+        "measured": edf["tokens_per_sec"],
+        "baseline": spec["baseline"],
+        "threshold": spec["threshold"],
+        "pass": edf["tokens_per_sec"] >= spec["baseline"] / spec["threshold"],
+    })
+    spec = base["high_priority_ttft_p99_ticks"]
+    measured = edf["high_priority"]["ttft_p99_ticks"]
+    checks.append({
+        "metric": "high_priority_ttft_p99_ticks",
+        "measured": measured,
+        "baseline": spec["baseline"],
+        "threshold": spec["threshold"],
+        "pass": measured <= spec["baseline"] * spec["threshold"],
+    })
+    return {
+        "baseline": baseline_path,
+        "checks": checks,
+        "pass": all(c["pass"] for c in checks),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=64)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/serving.json")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(dataclasses.replace(cfg, paged_kv=True))
+    params = model.init(jax.random.PRNGKey(0))
+
+    policies = {}
+    for policy in POLICIES:
+        print(f"== {policy} ==")
+        policies[policy] = run_policy(cfg, params, policy, args.steps)
+        p = policies[policy]
+        print(f"   ticks={p['ticks']} tok/s={p['tokens_per_sec']:.2f} "
+              f"preempt={p['preemptions']} "
+              f"hp_ttft={p['high_priority']['ttft_ticks']} "
+              f"hp_violations={p['high_priority']['violations']}")
+
+    failures = []
+    if policies["fcfs"]["high_priority"]["violations"] < 1:
+        failures.append("fcfs shows no SLO violations — workload is not "
+                        "adversarial enough to distinguish policies")
+    for pol in ("priority", "slo-edf"):
+        if policies[pol]["high_priority"]["violations"] != 0:
+            failures.append(f"{pol} missed a high-priority deadline")
+    p99_fcfs = policies["fcfs"]["high_priority"]["ttft_p99_ticks"]
+    p99_edf = policies["slo-edf"]["high_priority"]["ttft_p99_ticks"]
+    if not p99_edf < p99_fcfs:
+        failures.append(f"slo-edf hp TTFT p99 ({p99_edf}) not strictly "
+                        f"better than fcfs ({p99_fcfs})")
+
+    gate = evaluate_gate(policies, args.baseline)
+    report = {
+        "benchmark": "serving_slo",
+        "arch": args.arch,
+        "config": {
+            "steps": args.steps,
+            "slots": WORKLOAD["slots"],
+            "max_seq": WORKLOAD["max_seq"],
+            "long_requests": WORKLOAD["long_requests"],
+            "long_prompt": WORKLOAD["long_prompt"],
+            "long_new": WORKLOAD["long_new"],
+            "short_requests": WORKLOAD["short_requests"],
+            "short_prompt": WORKLOAD["short_prompt"],
+            "short_new": WORKLOAD["short_new"],
+            "ttft_deadline": WORKLOAD["ttft_deadline"],
+        },
+        "policies": policies,
+        "comparison": {
+            "high_priority_ttft_p99_fcfs": p99_fcfs,
+            "high_priority_ttft_p99_slo_edf": p99_edf,
+            "slo_edf_strictly_better": p99_edf < p99_fcfs,
+        },
+        "gate": gate,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+    for c in gate["checks"]:
+        status = "PASS" if c["pass"] else "FAIL"
+        print(f"   gate {c['metric']}: {c['measured']:.3g} vs baseline "
+              f"{c['baseline']} (threshold {c['threshold']}x) [{status}]")
+    for msg in failures:
+        print(f"CONTRACT FAIL: {msg}")
+    if failures or not gate["pass"]:
+        sys.exit(1)
+    print("serving SLO contract + gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

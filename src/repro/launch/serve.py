@@ -6,8 +6,13 @@
 `--dense` falls back to the monolithic-cache reference engine. Page-pool
 knobs: --page-tokens (page size), --hot-pages (fast-tier frames; 0 = fit
 everything), --distance (preload distance for page restores; 0 = planner
-d*). A per-tick metrics line reports tokens/s, page faults, shared-prefix
-hits, and the modeled fraction of restore latency the preload plan hides.
+d*). Scheduling knobs: --policy (fcfs | priority | slo-edf; the latter two
+preempt running requests, swapping their pages to the cold tier),
+--prefill-chunk (page-aligned chunked prefill so long prompts don't stall
+decode), --high-priority-every / --ttft-deadline to shape a mixed-urgency
+workload. A per-tick metrics line reports tokens/s, page faults,
+shared-prefix hits, and the modeled fraction of restore latency the
+preload plan hides.
 """
 from __future__ import annotations
 
@@ -47,6 +52,18 @@ def main(argv=None):
     ap.add_argument("--paged-kernel", action="store_true",
                     help="kernel-true decode: attention streams straight "
                          "over page frames (no dense assembly)")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "priority", "slo-edf"),
+                    help="admission policy; priority and slo-edf preempt "
+                         "running requests (swap-out to the cold tier)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: page-aligned tokens per tick for "
+                         "prompts longer than this (0 = monolithic)")
+    ap.add_argument("--high-priority-every", type=int, default=0,
+                    help="mark every Nth request high-priority with a TTFT "
+                         "deadline (0 = uniform workload)")
+    ap.add_argument("--ttft-deadline", type=int, default=8,
+                    help="TTFT deadline in ticks for high-priority requests")
     ap.add_argument("--log-every", type=int, default=8)
     args = ap.parse_args(argv)
 
@@ -75,7 +92,9 @@ def main(argv=None):
             preload_distance=args.distance or None,
             max_active_tokens=args.max_active_tokens,
             share_prefix_pages=not args.no_prefix_sharing,
-            use_paged_kernel=args.paged_kernel),
+            use_paged_kernel=args.paged_kernel,
+            policy=args.policy,
+            prefill_chunk_tokens=args.prefill_chunk),
             metrics_hook=hook)
         print(f"[serve] paged KV: {eng.layout.features} packed features/token"
               f", {args.page_tokens} tokens/page, planned d*="
@@ -85,7 +104,10 @@ def main(argv=None):
         1, cfg.vocab_size, size=(args.requests, 8)).tolist()
     t0 = time.time()
     for i, p in enumerate(prompts):
-        eng.submit(Request(rid=i, prompt=p, max_new_tokens=args.max_new))
+        hp = args.high_priority_every and (i % args.high_priority_every == 0)
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=args.max_new,
+                           priority=1 if hp else 0,
+                           ttft_deadline=args.ttft_deadline if hp else -1))
     out = eng.run()
     dt = time.time() - t0
     total = sum(len(v) for v in out.values())
@@ -99,6 +121,10 @@ def main(argv=None):
               f"{snap['page_faults']}, evictions {snap['evictions']}, "
               f"shared hits {snap['shared_page_hits']}, mean queue wait "
               f"{snap['mean_queue_latency']:.1f} ticks")
+        print(f"[serve] policy {snap['policy']}: preemptions "
+              f"{snap['preemptions']}, readmissions {snap['readmissions']}, "
+              f"chunk passes {snap['chunk_passes']}, SLO violations "
+              f"{snap['slo_violations']}, rejected {snap['rejected']}")
 
 
 if __name__ == "__main__":

@@ -5,13 +5,20 @@ from repro.serving.engine import (
     PagedServingEngine,
     Request,
     ServingEngine,
+    mean,
+    percentile,
 )
 from repro.serving.kv_pages import KVPagePool, PackedKVLayout, PageConfig
-from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
+from repro.serving.scheduler import (
+    POLICIES,
+    AdmissionScheduler,
+    SchedulerConfig,
+)
 
 __all__ = [
     "EngineConfig", "Request", "ServingEngine",
     "PagedEngineConfig", "PagedServingEngine", "EngineMetrics",
     "KVPagePool", "PackedKVLayout", "PageConfig",
-    "AdmissionScheduler", "SchedulerConfig",
+    "AdmissionScheduler", "SchedulerConfig", "POLICIES",
+    "percentile", "mean",
 ]

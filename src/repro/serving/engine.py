@@ -33,6 +33,28 @@ Fully-shared prompts are cheaper still: when a request's whole page-aligned
 prompt already lives in shared pages, admission refs the pages and replays
 the cached first-token logits — zero prefill compute (`prefill_skips`).
 
+Scheduling is policy-driven (``PagedEngineConfig.policy``): ``fcfs`` is the
+original strict-FIFO admission; ``priority`` and ``slo-edf`` additionally
+PREEMPT running requests to make room for urgent arrivals — the victim's
+private pages spill to the cold tier (the existing swap-out machinery), its
+slot is vacated, and the request requeues for readmission, resuming
+mid-decode from its restored pages token-for-token. ``slo-edf`` orders the
+queue by TTFT deadline and preempts only when a pending deadline would
+otherwise be missed (no running slot frees up in time).
+
+Chunked prefill (``prefill_chunk_tokens > 0``): long prompts prefill in
+page-aligned chunks, ONE bounded pass per engine tick, interleaved with the
+decode step — a long prompt can no longer head-of-line-block every short
+request's decode tick. Each pass re-runs the compiled bucket prefill over
+the prompt prefix so far (the smallest bucket that fits it, so per-tick
+prefill span is bounded by the prefix, not the full prompt) and banks the
+new chunk's KV pages; rows are bitwise identical to a monolithic prefill
+(causal attention: row t depends only on tokens <= t), so token streams
+stay dense-reference-exact. The slot joins decode on the pass that
+completes the prompt. On a real accelerator each pass would attend to the
+banked pages instead of recomputing the prefix; the scheduling shape — and
+the per-tick latency bound that protects decode — is the same.
+
 MoE caveat: capacity-factor dispatch mixes tokens across the batch, so MoE
 archs serve fine but are not bitwise batch-size-invariant; the differential
 zoo subset uses dense archs.
@@ -65,6 +87,28 @@ from repro.serving.scheduler import (
     Request,
     SchedulerConfig,
 )
+
+
+def percentile(xs, q: float) -> float:
+    """q-th percentile (linear interpolation) as a plain float.
+
+    Degenerate inputs are first-class: an EMPTY sample returns 0.0 instead
+    of raising (np.percentile([]) crashes), so a metrics snapshot taken on
+    a tiny/zero-length run — exactly what the SLO benchmark's smoke config
+    produces — can never take the engine down."""
+    xs = list(xs)
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def mean(xs) -> float:
+    """Mean as a plain float; 0.0 for an empty sample (np.mean([]) is nan
+    with a RuntimeWarning — poison for a JSON metrics report)."""
+    xs = list(xs)
+    if not xs:
+        return 0.0
+    return float(np.mean(np.asarray(xs, np.float64)))
 
 
 def _drain_results(requests: Dict[int, Request]) -> Dict[int, List[int]]:
@@ -210,6 +254,11 @@ class PagedEngineConfig:
                                      # straight over pages (no dense assembly);
                                      # False keeps assemble-then-attend as the
                                      # oracle path
+    policy: str = "fcfs"            # "fcfs" | "priority" | "slo-edf"
+    prefill_chunk_tokens: int = 0   # >0: prompts longer than this prefill in
+                                    # page-aligned chunks, one pass per tick,
+                                    # interleaved with decode (0 = monolithic
+                                    # prefill at admission)
     greedy: bool = True
     sample_seed: int = 0            # rng seed for greedy=False sampling
 
@@ -220,12 +269,20 @@ class EngineMetrics:
     tokens_emitted: int = 0
     prefills: int = 0
     prefill_skips: int = 0      # admissions served entirely from shared pages
+    chunk_passes: int = 0       # chunked-prefill passes (subset of prefills)
     decode_steps: int = 0
+    preemptions: int = 0        # slots swapped out for a more urgent arrival
+    readmissions: int = 0       # preempted requests resumed mid-stream
+    slo_violations: int = 0     # first tokens emitted after their deadline
     wall_time: float = 0.0
 
     @property
     def tokens_per_sec(self) -> float:
-        return self.tokens_emitted / self.wall_time if self.wall_time else 0.0
+        """Throughput; 0.0 (not a ZeroDivisionError) when no wall time has
+        accumulated — snapshots are taken before the first step too."""
+        if self.wall_time <= 0.0:
+            return 0.0
+        return self.tokens_emitted / self.wall_time
 
 
 class PagedServingEngine:
@@ -247,6 +304,12 @@ class PagedServingEngine:
                              f"page_tokens ({P})")
         if max(engine_cfg.prefill_buckets) > S:
             raise ValueError("prefill bucket exceeds max_seq")
+        if engine_cfg.prefill_chunk_tokens and (
+                engine_cfg.prefill_chunk_tokens % P):
+            raise ValueError(
+                f"prefill_chunk_tokens ({engine_cfg.prefill_chunk_tokens}) "
+                f"must be a multiple of page_tokens ({P}) so chunk "
+                "boundaries are page-aligned")
         self.n_pages_per_slot = S // P
 
         self.layout = PackedKVLayout(self.model_cfg, B, S)
@@ -260,7 +323,7 @@ class PagedServingEngine:
         self.scheduler = AdmissionScheduler(SchedulerConfig(
             prefill_buckets=engine_cfg.prefill_buckets,
             max_active_tokens=engine_cfg.max_active_tokens or B * S,
-            page_tokens=P))
+            page_tokens=P, policy=engine_cfg.policy, max_seq=S))
 
         # compiled entry points: one prefill per bucket, one decode; the
         # kernel-true path binds the planner's d* as the in-kernel preload
@@ -283,6 +346,12 @@ class PagedServingEngine:
         self.requests: Dict[int, Request] = {}
         self._rng = np.random.default_rng(engine_cfg.sample_seed)
         self._paused_state: Dict[int, Dict[Tuple[str, ...], Any]] = {}
+        # policy-preempted (swapped-out) requests: rid -> saved slot state
+        # (page ids — cold until readmission —, fill level, non-pageable
+        # rows, chunked-prefill progress); the request itself is requeued
+        self._swapped: Dict[int, Dict[str, Any]] = {}
+        # in-flight chunked prefills: slot -> {"prompt", "filled"}
+        self._chunk: Dict[int, Dict[str, Any]] = {}
         self._tick = 0
         # prefill-compute reuse: first-token logits per fully page-aligned
         # shared prompt, keyed (bucket, prompt tuple); bounded LRU. Only
@@ -304,19 +373,30 @@ class PagedServingEngine:
         return self._prefill_fns[bucket]
 
     def submit(self, req: Request):
+        """Reject-at-submit anything that can NEVER be served: a queue slot
+        for an impossible request is a permanent head-of-line wedge."""
+        cost = self.scheduler.request_cost(req)
+        if cost > self.cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) = {cost} exceeds "
+                f"max_seq ({self.cfg.max_seq}); it can never fit a slot")
         if self.scheduler.request_pages(req) > self.pool.capacity:
             raise ValueError(
                 f"request {req.rid} needs {self.scheduler.request_pages(req)}"
                 f" pages; hot tier holds {self.pool.capacity}")
-        if self.scheduler.request_cost(req) > self.scheduler.cfg.max_active_tokens:
+        if cost > self.scheduler.cfg.max_active_tokens:
             raise ValueError(f"request {req.rid} exceeds the token budget")
         self.requests[req.rid] = req
         self.scheduler.submit(req, self._tick)
 
     # ------------------------------------------------------------------ #
     def _live_slots(self) -> List[int]:
+        """Slots that decode this tick: occupied, not paused, and not still
+        mid-chunked-prefill (a chunking slot has no first token yet)."""
         return [i for i, r in enumerate(self.slot_req)
-                if r is not None and not self.paused[i]]
+                if r is not None and not self.paused[i]
+                and i not in self._chunk]
 
     def _active_tokens(self) -> int:
         """Budget charge of the live batch — the SAME cost function the
@@ -332,20 +412,153 @@ class PagedServingEngine:
     # ------------------------------------------------------------------ #
     # admission + per-slot prefill
     # ------------------------------------------------------------------ #
-    def _admit(self):
+    def _run_admission(self) -> List[Admission]:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
-        admissions = self.scheduler.admit(
+        return self.scheduler.admit(
             free,
             active_tokens=self._active_tokens(),
             free_hot_frames=self.pool.capacity - self._live_page_count(),
-            now=self._tick)
+            now=self._tick,
+            total_hot_frames=self.pool.capacity)
+
+    def _admit(self):
+        self._place(self._run_admission())
+        if self.scheduler.cfg.policy == "fcfs":
+            return
+        # preemptive policies: while the policy-ordered head is still queued
+        # and a running victim should yield, swap the victim out (pages to
+        # the cold tier, request requeued) and retry admission. Bounded by
+        # the slot count — at most one preemption per occupied slot per tick.
+        for _ in range(len(self.slot_req)):
+            cand = self.scheduler.head()
+            if cand is None:
+                return
+            victim = self._preemption_victim(cand)
+            if victim is None:
+                return
+            self._preempt_to_queue(victim)
+            self._place(self._run_admission())
+
+    def _place(self, admissions: List[Admission]):
+        """Route admissions: swapped-out requests resume from saved pages,
+        long prompts start chunked prefill, fully-shared prompts skip
+        compute, the rest batch into per-bucket prefill groups."""
         by_bucket: Dict[int, List[Admission]] = {}
         for a in admissions:
+            if a.request.rid in self._swapped:
+                self._resume_swapped(a)
+                continue
             if self._try_shared_prefill(a):
                 continue                     # served without prefill compute
+            chunk = self.cfg.prefill_chunk_tokens
+            if chunk and len(a.request.prompt) > chunk:
+                self._start_chunk(a)
+                continue
             by_bucket.setdefault(a.bucket, []).append(a)
         for bucket, group in sorted(by_bucket.items()):
             self._prefill_group(bucket, group)
+
+    # ------------------------------------------------------------------ #
+    # policy-driven preemption (swap-out to the cold tier + requeue)
+    # ------------------------------------------------------------------ #
+    def _occupied_slots(self) -> List[int]:
+        """Preemption-victim candidates: occupied, not manually paused (a
+        paused slot's pages are already cold and its slot is a user
+        decision, not the scheduler's to reassign)."""
+        return [i for i, r in enumerate(self.slot_req)
+                if r is not None and not self.paused[i]]
+
+    def _remaining_ticks(self, slot: int) -> int:
+        """Estimated ticks until `slot` frees naturally: one token per tick
+        plus, mid-chunked-prefill, the remaining chunk passes."""
+        r = self.slot_req[slot]
+        rem = r.max_new_tokens - len(r.out_tokens)
+        st = self._chunk.get(slot)
+        if st is not None:
+            chunk = self.cfg.prefill_chunk_tokens
+            left = len(st["prompt"]) - st["filled"]
+            rem += -(-left // chunk)
+        return max(rem, 0)
+
+    def _preemption_victim(self, cand: Request) -> Optional[int]:
+        """Pick the slot to swap out for queued request `cand`, or None.
+
+        priority: any running request with strictly lower priority may
+        yield — lowest priority first, latest-admitted within a tie (least
+        sunk work). slo-edf: preempt ONLY when cand's TTFT deadline would
+        otherwise be missed (no slot frees up in time on its own); the
+        victim is the running request with the LATEST pending deadline
+        (none at all preferred) — never one more urgent than cand.
+        """
+        occupied = self._occupied_slots()
+        if not occupied:
+            return None
+        policy = self.scheduler.cfg.policy
+        if policy == "priority":
+            victims = [i for i in occupied
+                       if self.slot_req[i].priority < cand.priority]
+            if not victims:
+                return None
+            return min(victims, key=lambda i: (self.slot_req[i].priority,
+                                               -self.slot_req[i].admit_tick))
+        if policy == "slo-edf":
+            deadline = cand.deadline_tick()
+            if deadline == float("inf"):
+                return None                  # no deadline, no urgency
+            if self._tick + min(self._remaining_ticks(i)
+                                for i in occupied) <= deadline:
+                return None                  # a slot frees up in time
+            victims = [i for i in occupied
+                       if self.slot_req[i].deadline_tick() > deadline]
+            if not victims:
+                return None
+            return max(victims,
+                       key=lambda i: (self.slot_req[i].deadline_tick(),
+                                      self.slot_req[i].admit_tick))
+        return None
+
+    def _preempt_to_queue(self, slot: int):
+        """Swap a running request out of its slot: private pages spill to
+        the cold tier (shared prefix pages stay hot for their other
+        readers), non-pageable (recurrent) rows and chunked-prefill
+        progress are snapshotted, and the request requeues for readmission
+        — where it resumes mid-stream, token-for-token."""
+        req = self.slot_req[slot]
+        state = {
+            "pages": self.slot_pages[slot],
+            "slot_len": int(self.slot_len[slot]),
+            "nonpageable": self._nonpageable_rows(slot),
+            "chunk": self._chunk.pop(slot, None),
+        }
+        self.pool.evict_pages([pid for pid in state["pages"]
+                               if self.pool.pages[pid].refcount == 1])
+        self._swapped[req.rid] = state
+        self.slot_req[slot] = None
+        self.slot_pages[slot] = []
+        self.slot_len[slot] = 0
+        self.paused[slot] = False
+        self.metrics.preemptions += 1
+        self.scheduler.requeue(req, now=self._tick)
+
+    def _resume_swapped(self, a: Admission):
+        """Readmit a swapped-out request: saved pages re-attach to the new
+        slot (still cold — the next decode step's planned preload restores
+        them, counted as page faults), non-pageable rows are written back,
+        and an interrupted chunked prefill picks up where it left off."""
+        state = self._swapped.pop(a.request.rid)
+        req = a.request
+        req.resuming = False
+        slot = a.slot
+        self.slot_req[slot] = req
+        self.slot_pages[slot] = state["pages"]
+        self.slot_len[slot] = state["slot_len"]
+        self.paused[slot] = False
+        if state["nonpageable"]:
+            self._write_nonpageable_rows(slot, state["nonpageable"])
+        if state["chunk"] is not None:
+            self._chunk[slot] = state["chunk"]
+        self.pool.note_deadline(state["pages"], req.deadline_tick())
+        self.metrics.readmissions += 1
 
     def _try_shared_prefill(self, a: Admission) -> bool:
         """Admit a request whose WHOLE prompt is already resident as shared
@@ -370,6 +583,7 @@ class PagedServingEngine:
         if any(k not in self.pool.prefix_index for k in page_keys):
             return False
         pids = [self.pool.lookup_shared(k) for k in page_keys]
+        self.pool.note_deadline(pids, a.request.deadline_tick())
         self.slot_req[a.slot] = a.request
         self.slot_pages[a.slot] = pids
         self.slot_len[a.slot] = n
@@ -378,6 +592,36 @@ class PagedServingEngine:
         self._prompt_logits.move_to_end(key)
         self._emit_token(a.slot, logits)
         return True
+
+    def _write_prompt_pages(self, slot: int, key_bucket: int,
+                            prompt: List[int], lo: int, hi: int,
+                            packed, working: set):
+        """Allocate (or prefix-share) and fill the pages covering prompt
+        tokens [lo, hi) of `slot`, appending to its page table. `packed` is
+        this slot's (S >= hi, F) packed KV rows; `lo` must be page-aligned.
+        FULL pages are shareable under (key_bucket, prompt-prefix) keys —
+        identical whether written monolithically or chunk-by-chunk."""
+        P = self.cfg.page_tokens
+        req = self.slot_req[slot]
+        pids = self.slot_pages[slot]
+        assert lo % P == 0 and lo // P == len(pids)
+        for j in range(lo // P, -(-hi // P)):
+            plo, phi = j * P, min((j + 1) * P, hi)
+            if phi == (j + 1) * P:          # full page: shareable
+                key = (key_bucket, tuple(prompt[:phi]))
+                pid = self.pool.lookup_shared(key)
+                if pid is None:
+                    pid = self.pool.alloc(shared_key=key
+                                          if self.cfg.share_prefix_pages
+                                          else None,
+                                          needed=working)
+                    self.pool.write_page(pid, packed[plo:phi], phi - plo)
+            else:                            # partial tail page: private
+                pid = self.pool.alloc(needed=working)
+                self.pool.write_page(pid, packed[plo:phi], phi - plo)
+            pids.append(pid)
+            working.add(pid)
+        self.pool.note_deadline(pids, req.deadline_tick())
 
     def _prefill_group(self, bucket: int, group: List[Admission]):
         B, P = self.cfg.batch_slots, self.cfg.page_tokens
@@ -402,27 +646,10 @@ class PagedServingEngine:
         for a in group:
             slot, prompt = a.slot, prompts[a.slot]
             n = len(prompt)
-            pids: List[int] = []
+            self.slot_pages[slot] = []
             if self.layout.features:
-                n_full = n // P
-                for j in range(-(-n // P)):
-                    lo, hi = j * P, min((j + 1) * P, n)
-                    if j < n_full:
-                        key = (bucket, tuple(prompt[:hi]))
-                        pid = self.pool.lookup_shared(key)
-                        if pid is None:
-                            pid = self.pool.alloc(shared_key=key
-                                                  if self.cfg.share_prefix_pages
-                                                  else None,
-                                                  needed=working)
-                            self.pool.write_page(pid, packed[slot, lo:hi],
-                                                 hi - lo)
-                    else:
-                        pid = self.pool.alloc(needed=working)
-                        self.pool.write_page(pid, packed[slot, lo:hi], hi - lo)
-                    pids.append(pid)
-                    working.add(pid)
-            self.slot_pages[slot] = pids
+                self._write_prompt_pages(slot, bucket, prompt, 0, n,
+                                         packed[slot], working)
             self.slot_len[slot] = n
             self.paused[slot] = False
             self._merge_resident(caches, slot)
@@ -435,6 +662,69 @@ class PagedServingEngine:
                 if len(self._prompt_logits) > 512:
                     self._prompt_logits.popitem(last=False)
             self._emit_token(slot, np.asarray(logits[slot]))
+
+    # ------------------------------------------------------------------ #
+    # chunked prefill: one bounded pass per tick, interleaved with decode
+    # ------------------------------------------------------------------ #
+    def _start_chunk(self, a: Admission):
+        """Claim the slot for a long prompt without running any prefill
+        yet; `_advance_chunks` fills it one page-aligned chunk per tick.
+        The slot stays out of the decode batch until the prompt completes."""
+        self.slot_req[a.slot] = a.request
+        self.slot_pages[a.slot] = []
+        self.slot_len[a.slot] = 0
+        self.paused[a.slot] = False
+        self._chunk[a.slot] = {"prompt": a.request.prompt[-a.bucket:],
+                               "filled": 0}
+
+    def _advance_chunks(self):
+        for slot in sorted(self._chunk):
+            self._chunk_pass(slot)
+
+    def _chunk_pass(self, slot: int):
+        """One chunked-prefill pass: extend the slot's prefix by (up to)
+        `prefill_chunk_tokens` tokens and bank the new pages. The pass runs
+        the compiled prefill of the SMALLEST bucket holding the prefix so
+        far — per-tick prefill span is bounded by the prefix, and causal
+        attention makes the rows bitwise identical to a monolithic prefill
+        (row t depends only on tokens <= t; padding rows are masked to
+        exact zeros). The final pass — the same shape the dense reference
+        uses — merges non-pageable (recurrent) state and emits the first
+        token, so chunking is invisible in the token stream."""
+        st = self._chunk[slot]
+        req = self.slot_req[slot]
+        prompt, f = st["prompt"], st["filled"]
+        n = len(prompt)
+        hi = min(f + self.cfg.prefill_chunk_tokens, n)
+        bucket = self.scheduler.pick_bucket(hi)
+        B, P = self.cfg.batch_slots, self.cfg.page_tokens
+        toks = np.zeros((B, bucket), np.int32)
+        toks[slot, :hi] = prompt[:hi]
+        lengths = np.ones((B,), np.int32)
+        lengths[slot] = hi
+        logits, caches = self._prefill_for(bucket)(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray(lengths)})
+        self.metrics.prefills += 1
+        self.metrics.chunk_passes += 1
+        working = {pid for pages in self.slot_pages for pid in pages}
+        if self.layout.features:
+            packed = self.layout.pack(caches)
+            self._write_prompt_pages(slot, req.bucket, prompt, f, hi,
+                                     packed[slot], working)
+        st["filled"] = hi
+        self.slot_len[slot] = hi
+        if hi < n:
+            return                          # more chunks to go; decode runs on
+        del self._chunk[slot]               # prompt complete: slot goes live
+        self._merge_resident(caches, slot)
+        if (self.cfg.share_prefix_pages and self.layout.features
+                and not self._has_recurrent and n and n % P == 0):
+            self._prompt_logits[(req.bucket, tuple(prompt))] = \
+                np.asarray(logits[slot])
+            if len(self._prompt_logits) > 512:
+                self._prompt_logits.popitem(last=False)
+        self._emit_token(slot, np.asarray(logits[slot]))
 
     def _merge_resident(self, fresh, slot: int):
         """Copy one slot's NON-pageable cache rows (SSM states, idx) from a
@@ -503,6 +793,8 @@ class PagedServingEngine:
             pos = int(self.slot_len[i])
             if pos // P == len(self.slot_pages[i]):
                 pid = self.pool.alloc(needed=working)
+                self.pool.note_deadline([pid],
+                                        self.slot_req[i].deadline_tick())
                 self.slot_pages[i].append(pid)
                 working.add(pid)
 
@@ -595,6 +887,10 @@ class PagedServingEngine:
             nxt = int(self._rng.choice(p.shape[-1], p=p / p.sum()))
         r.out_tokens.append(nxt)
         self.metrics.tokens_emitted += 1
+        if r.first_token_tick < 0:
+            r.first_token_tick = self._tick
+            if r.ttft_deadline >= 0 and r.ttft > r.ttft_deadline:
+                self.metrics.slo_violations += 1
         out_of_room = int(self.slot_len[slot]) + 1 >= self.cfg.max_seq
         if len(r.out_tokens) >= r.max_new_tokens or out_of_room:
             self._finish(slot)
@@ -667,6 +963,7 @@ class PagedServingEngine:
     def step(self):
         t0 = time.perf_counter()
         self._admit()
+        self._advance_chunks()
         faults = self._decode_step() or 0
         self._tick += 1
         self.metrics.ticks = self._tick
@@ -679,10 +976,17 @@ class PagedServingEngine:
         lat = self.scheduler.queue_latencies()
         snap = {
             "tick": self._tick,
+            "policy": self.scheduler.cfg.policy,
             "tokens_emitted": self.metrics.tokens_emitted,
             "tokens_per_sec": self.metrics.tokens_per_sec,
             "prefills": self.metrics.prefills,
             "prefill_skips": self.metrics.prefill_skips,
+            "chunk_passes": self.metrics.chunk_passes,
+            "preemptions": self.metrics.preemptions,
+            "readmissions": self.metrics.readmissions,
+            "slo_violations": self.metrics.slo_violations,
+            "rejected": self.scheduler.rejected,
+            "swapped_out": len(self._swapped),
             "live_slots": len(self._live_slots()),
             "queued": len(self.scheduler),
             "page_faults": pm.page_faults,
@@ -692,7 +996,7 @@ class PagedServingEngine:
             "hot_pages_in_use": self.pool.hot_in_use(),
             "preload_distance": self.pool.distance,
             "modeled_restore_latency_hidden": pm.modeled_latency_hidden,
-            "mean_queue_latency": float(np.mean(lat)) if lat else 0.0,
+            "mean_queue_latency": mean(lat),
         }
         snap.update(extra)
         return snap

@@ -244,6 +244,9 @@ class _PageMeta:
     refcount: int = 1
     last_used: int = 0
     shared_key: Optional[tuple] = None
+    deadline: float = float("inf")   # owning request's TTFT deadline tick
+                                     # (inf: none) — eviction prefers pages
+                                     # whose requests can afford the restore
 
 
 ZERO_FRAME = 0      # reserved all-zeros frame (unallocated page-table slots)
@@ -339,13 +342,24 @@ class KVPagePool:
         del self.pages[pid]
 
     # ------------------------------------------------------------------ #
+    def note_deadline(self, pids: Sequence[int], deadline: float):
+        """Tag pages with their owning request's absolute TTFT-deadline
+        tick (inf: no deadline). Eviction orders victims by LATEST deadline
+        first — a page whose request has slack can afford the restore
+        round-trip; one racing a deadline cannot. The engine refreshes tags
+        at every admission/resume, so a shared page carries its most recent
+        requester's urgency (a deliberate, cheap approximation)."""
+        for pid in pids:
+            self.pages[pid].deadline = deadline
+
     def _take_frame(self, needed: Sequence[int]) -> int:
-        """Get a free hot frame, evicting LRU pages not in `needed`."""
+        """Get a free hot frame, evicting pages not in `needed` — latest
+        request deadline first (deadline-aware), then LRU within a tie."""
         if self.free_frames:
             return self.free_frames.pop()
         needed = set(needed)
         victims = sorted(
-            (m.last_used, pid) for pid, m in self.pages.items()
+            ((-m.deadline, m.last_used), pid) for pid, m in self.pages.items()
             if m.frame is not None and pid not in needed)
         if not victims:
             raise RuntimeError(

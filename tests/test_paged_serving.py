@@ -50,11 +50,14 @@ def _set_idx(tree, vec):
     return jax.tree_util.tree_unflatten(td, out)
 
 
-def _pick_bucket(buckets, n):
+def _pick_bucket(buckets, n, max_seq=64):
+    """Mirror of AdmissionScheduler.pick_bucket: prompts longer than the
+    largest configured bucket prefill at max_seq (the implicit top bucket)
+    instead of being truncated."""
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    return max(max_seq, buckets[-1])
 
 
 def dense_reference(model, params, prompt, max_new, bucket, *, B, max_seq):
