@@ -14,6 +14,7 @@ sys.path.insert(0, "src")
 
 import argparse
 
+from repro.analysis.plan_verifier import verify_kv_page_plan
 from repro.core import (
     DMAEngine,
     KVPageWorkload,
@@ -43,6 +44,14 @@ def main():
     wl = KVPageWorkload(page_bytes=P * F * 2,
                         flops_per_page=4.0 * P * F * args.gqa,
                         pages_per_step=args.pages_per_step, steps=args.steps)
+    # precondition: the planner's output must pass static verification
+    # (coverage, issue ordering, FIFO discipline) before anything executes
+    report = verify_kv_page_plan(plan, n_pages=wl.n_pages,
+                                 page_bytes=wl.page_bytes)
+    print(f"plan verified: d*={report.distance}, {report.n_blocks} pages, "
+          f"peak in-flight window {report.max_in_flight}"
+          + (f" ({len(report.warnings)} warning(s))" if report.warnings
+             else ""))
     print(f"KV pages: {P} tok x {F} feat = {wl.page_bytes} B;"
           f" tier={tier.name} pe={pe.name} gqa={args.gqa}")
     print(f"planner: d*={plan.cfg.distance} ({plan.bound}-bound, predicted "

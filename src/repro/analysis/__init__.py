@@ -1,0 +1,42 @@
+"""Static analysis & sanitizers for the PUL serving stack.
+
+Three checking layers, all pure Python (no jax dependency — they must be
+importable from CI lint jobs and from the hot serving path without pulling
+in a device runtime):
+
+  - :mod:`repro.analysis.events`    — typed page-lifecycle event trace
+    recorded by ``KVPagePool`` when ``PageConfig.trace=True``.
+  - :mod:`repro.analysis.sanitizer` — replays a trace against the formal
+    page-lifecycle state machine and reports violations with event-level
+    provenance (refcount underflow/leak, use-after-evict, zero-frame
+    writes, double restore, same-step evict/restore churn, deadline-order
+    violations in eviction).
+  - :mod:`repro.analysis.plan_verifier` — statically validates
+    ``plan_stream`` / ``plan_kv_page_stream`` outputs (coverage, issue
+    ordering, FIFO-depth discipline) before ``DMAEngine.run_stream``
+    executes them.
+  - :mod:`repro.analysis.lint`      — AST-based jit-safety lint for
+    ``src/repro`` (traced-value control flow, host syncs in jitted code,
+    non-static BlockSpec shapes, mutable defaults, swallowed exceptions).
+"""
+from repro.analysis.events import EventKind, PageEvent, TraceLog
+from repro.analysis.plan_verifier import (
+    PlanError,
+    PlanReport,
+    verify_kv_page_plan,
+    verify_stream_plan,
+)
+from repro.analysis.sanitizer import (
+    LifecycleChecker,
+    LifecycleViolationError,
+    Violation,
+    check_page_trace,
+    format_violations,
+)
+
+__all__ = [
+    "EventKind", "PageEvent", "TraceLog",
+    "LifecycleChecker", "LifecycleViolationError", "Violation",
+    "check_page_trace", "format_violations",
+    "PlanError", "PlanReport", "verify_stream_plan", "verify_kv_page_plan",
+]

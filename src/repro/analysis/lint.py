@@ -1,0 +1,500 @@
+"""AST-based jit-safety lint for the PUL codebase.
+
+Generic style/correctness linting belongs to ``ruff`` (configured in
+``pyproject.toml``); this pass carries only the *domain* rules — tracing
+hazards that are legal Python but wrong (or silently catastrophic) inside
+``jax.jit`` / Pallas code paths:
+
+  PUL101 traced-branch       Python ``if``/``while`` on a traced value in a
+                             jitted/kernel function. Trace-time control flow
+                             silently bakes one branch into the compiled
+                             artifact; use ``jnp.where``/``lax.cond``.
+  PUL102 host-sync           ``.item()`` / ``.tolist()`` / ``float()`` /
+                             ``int()`` / ``bool()`` / ``np.asarray()`` on a
+                             traced value: forces a device sync (or a
+                             ConcretizationTypeError) in the hot path.
+  PUL103 nonstatic-blockspec A ``pl.BlockSpec`` block shape built from a
+                             traced value — block shapes must be static.
+  PUL104 mutable-default     Mutable default argument (shared across calls;
+                             a classic aliasing bug, and jit caches make it
+                             worse by baking the first call's value in).
+  PUL105 swallowed-exception Bare ``except:`` / ``except BaseException``
+                             without re-raise (eats KeyboardInterrupt and
+                             SystemExit), or an ``except Exception`` whose
+                             handler neither re-raises nor inspects the
+                             exception — a silent swallow.
+
+Traced-vs-host classification is annotation-driven, not heuristic: a
+parameter annotated ``jax.Array`` / ``jnp.ndarray`` is traced; any other
+annotation (``np.ndarray``, ``int``, config dataclasses, ...) is host.
+Unannotated parameters are assumed traced ONLY inside explicit jit/kernel
+contexts (functions decorated/wrapped with ``jax.jit``, passed to
+``pl.pallas_call``, or named ``*_kernel``); elsewhere precision comes from
+the annotations — which is why the serving/planner public APIs are fully
+annotated. Static accessors (``x.shape``, ``x.ndim``, ``x.dtype``,
+``len(x)``, ``isinstance(x, ...)``, ``x is None``) never count as traced
+*uses*: shapes and dtypes are static under tracing.
+
+Waive a true-but-intended finding with an inline comment on the flagged
+line: ``# pul-lint: disable=PUL101`` (comma-separated list, or ``all``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "PUL101": "Python branch on a traced value in a jit/kernel context",
+    "PUL102": "host sync on a traced value in a jit/kernel context",
+    "PUL103": "non-static BlockSpec block shape",
+    "PUL104": "mutable default argument",
+    "PUL105": "swallowed exception",
+}
+
+_WAIVER_RE = re.compile(r"#\s*pul-lint:\s*disable=([A-Za-z0-9,_\s]+|all)")
+
+# annotations that mean "this value is traced under jit"
+_TRACED_ANNOTATIONS = {
+    "jax.Array", "Array", "jnp.ndarray", "jax.numpy.ndarray", "ndarray",
+    "chex.Array", "ArrayLike", "jax.typing.ArrayLike",
+}
+# attribute reads that are static at trace time (never a traced *use*)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "at"}
+# calls whose result is host-static regardless of traced arguments
+_STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr", "id",
+                 "repr", "str"}
+# module prefixes whose call results are traced arrays inside a jit context
+_ARRAY_MODULES = ("jnp", "lax", "pl", "pltpu")
+_HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_HOST_SYNC_CALLS = {"float", "int", "bool", "complex"}
+_NUMPY_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray",
+                     "numpy.array", "onp.asarray", "onp.array"}
+_JIT_WRAPPERS = {"jax.jit", "jit", "jax.pmap", "pmap"}
+_KERNEL_WRAPPERS = {"pl.pallas_call", "pallas_call", "pltpu.pallas_call"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def describe(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _annotation_name(node: Optional[ast.AST]) -> Optional[str]:
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Subscript):        # Optional[jax.Array] etc.
+        return _annotation_name(node.slice)
+    return _dotted(node)
+
+
+def _is_traced_annotation(node: Optional[ast.AST]) -> bool:
+    name = _annotation_name(node)
+    return name is not None and name in _TRACED_ANNOTATIONS
+
+
+class _TracedUses(ast.NodeVisitor):
+    """Collect *dynamic* uses of traced names inside one expression.
+
+    A traced name consumed only through static accessors (``x.shape``,
+    ``len(x)``, ``x is None``) contributes nothing — those are resolved at
+    trace time and are safe in Python control flow.
+    """
+
+    def __init__(self, traced: Set[str]):
+        self.traced = traced
+        self.uses: List[ast.Name] = []
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id in self.traced:
+            self.uses.append(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if node.attr in _STATIC_ATTRS:
+            return                      # x.shape / x.dtype: static
+        self.visit(node.value)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        if name in _STATIC_CALLS:
+            return                      # len(x), isinstance(x, ...): static
+        if name in _HOST_SYNC_CALLS or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _HOST_SYNC_METHODS):
+            return                      # float(x) / x.item(): the RESULT is
+                                        # a host scalar (the sync itself is
+                                        # PUL102's business, inside jit)
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return                      # `x is None`: trace-time identity
+        self.generic_visit(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        return                          # separate scope, analyzed on its own
+
+
+def _dynamic_uses(expr: ast.AST, traced: Set[str]) -> List[ast.Name]:
+    v = _TracedUses(traced)
+    v.visit(expr)
+    return v.uses
+
+
+def _expr_is_traced(expr: ast.AST, traced: Set[str], in_jit: bool) -> bool:
+    """Does evaluating `expr` yield a traced value?"""
+    if _dynamic_uses(expr, traced):
+        return True
+    if in_jit and isinstance(expr, ast.Call):
+        name = _dotted(expr.func) or ""
+        head = name.split(".", 1)[0]
+        if head in _ARRAY_MODULES or name.startswith("jax."):
+            return True                 # jnp.zeros(...) etc. -> array
+    return False
+
+
+class _FunctionLinter:
+    """Lint one function body (not recursing into nested scopes)."""
+
+    def __init__(self, fn, *, path: str, in_jit: bool,
+                 findings: List[Finding]):
+        self.fn = fn
+        self.path = path
+        self.in_jit = in_jit
+        self.findings = findings
+        self.traced = self._initial_traced(fn)
+
+    # -------------------------------------------------------------- #
+    def _initial_traced(self, fn) -> Set[str]:
+        traced: Set[str] = set()
+        args = fn.args
+        positional = list(args.posonlyargs) + list(args.args)
+        for a in positional:
+            if _is_traced_annotation(a.annotation):
+                traced.add(a.arg)
+            elif a.annotation is None and self.in_jit and a.arg != "self":
+                traced.add(a.arg)       # conservative fallback, jit only
+        # keyword-only params of kernels are static partial-bound knobs;
+        # trust annotations either way
+        for a in args.kwonlyargs:
+            if _is_traced_annotation(a.annotation):
+                traced.add(a.arg)
+        return traced
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=node.lineno,
+            col=node.col_offset, message=message))
+
+    # -------------------------------------------------------------- #
+    def run(self) -> None:
+        body = self.fn.body if not isinstance(self.fn, ast.Lambda) \
+            else [ast.Expr(value=self.fn.body)]
+        for stmt in body:
+            self._visit_stmt(stmt)
+
+    def _visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return                      # nested scope: handled separately
+        if isinstance(stmt, ast.Assign):
+            if _expr_is_traced(stmt.value, self.traced, self.in_jit):
+                for tgt in stmt.targets:
+                    for name in ast.walk(tgt):
+                        if isinstance(name, ast.Name):
+                            self.traced.add(name.id)
+            self._visit_expr(stmt.value)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                if (_is_traced_annotation(stmt.annotation)
+                        or _expr_is_traced(stmt.value, self.traced,
+                                           self.in_jit)):
+                    if isinstance(stmt.target, ast.Name):
+                        self.traced.add(stmt.target.id)
+                self._visit_expr(stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            self._visit_expr(stmt.value)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            self._check_branch(stmt)
+            self._visit_expr(stmt.test)
+            for s in stmt.body + stmt.orelse:
+                self._visit_stmt(s)
+        elif isinstance(stmt, ast.For):
+            if _expr_is_traced(stmt.iter, self.traced, self.in_jit):
+                for name in ast.walk(stmt.target):
+                    if isinstance(name, ast.Name):
+                        self.traced.add(name.id)
+            self._visit_expr(stmt.iter)
+            for s in stmt.body + stmt.orelse:
+                self._visit_stmt(s)
+        elif isinstance(stmt, ast.Try):
+            for s in (stmt.body + stmt.orelse + stmt.finalbody
+                      + [h for hh in stmt.handlers for h in hh.body]):
+                self._visit_stmt(s)
+        elif isinstance(stmt, ast.With):
+            for s in stmt.body:
+                self._visit_stmt(s)
+        elif isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self._visit_expr(stmt.value)
+        # other statements (pass, raise, etc.): nothing traced to track
+
+    # -------------------------------------------------------------- #
+    def _check_branch(self, stmt) -> None:
+        # outside jit contexts `self.traced` only holds annotation-traced
+        # names (and values derived from them), so host code that branches
+        # on genuinely-host values is never flagged
+        uses = _dynamic_uses(stmt.test, self.traced)
+        if uses:
+            kind = "if" if isinstance(stmt, ast.If) else "while"
+            names = ", ".join(sorted({u.id for u in uses}))
+            self._flag("PUL101", stmt,
+                       f"`{kind}` on traced value(s) {names}: trace-time "
+                       "control flow bakes one branch into the compiled "
+                       "artifact (use jnp.where / lax.cond / lax.while_loop)")
+
+    def _visit_expr(self, expr: ast.AST) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self._check_call(node)
+
+    def _check_call(self, call: ast.Call) -> None:
+        name = _dotted(call.func)
+        # PUL103: BlockSpec shapes must be static (any context — precision
+        # comes from annotations outside jit functions)
+        if name is not None and name.split(".")[-1] == "BlockSpec":
+            self._check_blockspec(call)
+        if not self.in_jit:
+            return
+        # PUL102: host syncs on traced values
+        if (isinstance(call.func, ast.Attribute)
+                and call.func.attr in _HOST_SYNC_METHODS
+                and _expr_is_traced(call.func.value, self.traced, False)):
+            self._flag("PUL102", call,
+                       f".{call.func.attr}() on a traced value forces a "
+                       "host sync inside the jitted hot path")
+            return
+        if name in _HOST_SYNC_CALLS and call.args and \
+                _dynamic_uses(call.args[0], self.traced):
+            self._flag("PUL102", call,
+                       f"{name}() on a traced value raises "
+                       "ConcretizationTypeError (or syncs) under jit")
+        elif name in _NUMPY_SYNC_CALLS and call.args and \
+                _dynamic_uses(call.args[0], self.traced):
+            self._flag("PUL102", call,
+                       f"{name}() on a traced value pulls it to host "
+                       "memory inside the jitted hot path")
+
+    def _check_blockspec(self, call: ast.Call) -> None:
+        shape = None
+        if call.args and not isinstance(call.args[0], ast.Lambda):
+            shape = call.args[0]
+        for kw in call.keywords:
+            if kw.arg == "block_shape":
+                shape = kw.value
+        if shape is None or not isinstance(shape, (ast.Tuple, ast.List)):
+            return
+        uses = _dynamic_uses(shape, self.traced)
+        if uses:
+            names = ", ".join(sorted({u.id for u in uses}))
+            self._flag("PUL103", call,
+                       f"BlockSpec block shape depends on traced value(s) "
+                       f"{names}: block shapes must be static")
+
+
+# ------------------------------------------------------------------ #
+# module-level pass
+# ------------------------------------------------------------------ #
+class _ModuleLinter(ast.NodeVisitor):
+    def __init__(self, tree: ast.Module, path: str):
+        self.tree = tree
+        self.path = path
+        self.findings: List[Finding] = []
+        self.jit_names = self._collect_jit_names(tree)
+
+    # -------------------------------------------------------------- #
+    def _collect_jit_names(self, tree: ast.Module) -> Set[str]:
+        """Names of functions that end up inside jit/pallas_call wrappers,
+        resolving one level of `x = functools.partial(f, ...)` aliasing."""
+        alias: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)):
+                fname = _dotted(node.value.func)
+                if fname in ("functools.partial", "partial") \
+                        and node.value.args:
+                    inner = _dotted(node.value.args[0])
+                    if inner:
+                        alias[node.targets[0].id] = inner
+        jit: Set[str] = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = _dotted(node.func)
+            if fname not in _JIT_WRAPPERS | _KERNEL_WRAPPERS:
+                continue
+            for arg in node.args[:1]:
+                target = _dotted(arg)
+                if target is not None:
+                    jit.add(alias.get(target, target))
+        return jit
+
+    def _is_jit_context(self, fn) -> bool:
+        if isinstance(fn, ast.Lambda):
+            return False                # handled at the jit call sites
+        for deco in fn.decorator_list:
+            name = _dotted(deco if not isinstance(deco, ast.Call)
+                           else deco.func)
+            if name in _JIT_WRAPPERS:
+                return True
+            if isinstance(deco, ast.Call) and _dotted(deco.func) in (
+                    "functools.partial", "partial") and deco.args:
+                if _dotted(deco.args[0]) in _JIT_WRAPPERS:
+                    return True
+        if fn.name in self.jit_names:
+            return True
+        # repo convention: Pallas kernel bodies are named *_kernel
+        return fn.name == "kernel" or fn.name.endswith("_kernel")
+
+    # -------------------------------------------------------------- #
+    def run(self) -> List[Finding]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._lint_function(node)
+                self._check_mutable_defaults(node)
+            elif isinstance(node, ast.Lambda):
+                pass                    # params traced only via jit wrap
+            elif isinstance(node, ast.Try):
+                self._check_handlers(node)
+        # lambdas passed straight into jit wrappers
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) and _dotted(node.func) in (
+                    _JIT_WRAPPERS | _KERNEL_WRAPPERS):
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Lambda):
+                        _FunctionLinter(arg, path=self.path, in_jit=True,
+                                        findings=self.findings).run()
+        return self.findings
+
+    def _lint_function(self, fn) -> None:
+        _FunctionLinter(fn, path=self.path,
+                        in_jit=self._is_jit_context(fn),
+                        findings=self.findings).run()
+
+    # -------------------------------------------------------------- #
+    def _check_mutable_defaults(self, fn) -> None:
+        defaults = list(fn.args.defaults) + [
+            d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            mutable = isinstance(d, (ast.List, ast.Dict, ast.Set,
+                                     ast.ListComp, ast.DictComp, ast.SetComp))
+            if isinstance(d, ast.Call) and _dotted(d.func) in (
+                    "list", "dict", "set", "bytearray"):
+                mutable = True
+            if mutable:
+                self.findings.append(Finding(
+                    rule="PUL104", path=self.path, line=d.lineno,
+                    col=d.col_offset,
+                    message=f"mutable default argument in {fn.name}(): "
+                            "shared across calls; use None + in-body init"))
+
+    def _check_handlers(self, node: ast.Try) -> None:
+        for h in node.handlers:
+            caught = _dotted(h.type) if h.type is not None else None
+            broad_base = h.type is None or caught == "BaseException"
+            catches_exc = caught == "Exception"
+            if not (broad_base or catches_exc):
+                continue
+            has_raise = any(isinstance(n, ast.Raise)
+                            for n in ast.walk(ast.Module(body=h.body,
+                                                         type_ignores=[])))
+            if broad_base and not has_raise:
+                what = "bare except" if h.type is None \
+                    else "except BaseException"
+                self.findings.append(Finding(
+                    rule="PUL105", path=self.path, line=h.lineno,
+                    col=h.col_offset,
+                    message=f"{what} without re-raise swallows "
+                            "KeyboardInterrupt/SystemExit; catch Exception "
+                            "or re-raise"))
+            elif catches_exc and not has_raise and not self._uses_exc(h):
+                self.findings.append(Finding(
+                    rule="PUL105", path=self.path, line=h.lineno,
+                    col=h.col_offset,
+                    message="except Exception swallowed silently (no "
+                            "re-raise, exception never inspected/logged); "
+                            "name the expected exception or log it"))
+
+    @staticmethod
+    def _uses_exc(h: ast.ExceptHandler) -> bool:
+        if h.name is None:
+            # no binding: the handler can still log via traceback/logging
+            return any(
+                isinstance(n, ast.Call) and (_dotted(n.func) or "").split(
+                    ".")[0] in ("traceback", "logging", "log", "warnings")
+                for n in ast.walk(ast.Module(body=h.body, type_ignores=[])))
+        return any(isinstance(n, ast.Name) and n.id == h.name
+                   for n in ast.walk(ast.Module(body=h.body,
+                                                type_ignores=[])))
+
+
+# ------------------------------------------------------------------ #
+# entry points
+# ------------------------------------------------------------------ #
+def _waived_rules(source: str) -> Dict[int, Set[str]]:
+    waivers: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVER_RE.search(line)
+        if m:
+            spec = m.group(1).strip()
+            rules = (set(RULES) if spec == "all"
+                     else {r.strip() for r in spec.split(",") if r.strip()})
+            waivers[i] = rules
+    return waivers
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source text; returns unwaived findings."""
+    tree = ast.parse(source, filename=path)
+    findings = _ModuleLinter(tree, path).run()
+    waivers = _waived_rules(source)
+    kept = [f for f in findings
+            if f.rule not in waivers.get(f.line, set())]
+    return sorted(kept, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def lint_file(path: Path) -> List[Finding]:
+    return lint_source(path.read_text(), str(path))
+
+
+def lint_paths(paths: Sequence[Path]) -> List[Finding]:
+    """Lint every .py file under the given files/directories."""
+    findings: List[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files: Iterable[Path] = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f))
+    return findings

@@ -101,7 +101,7 @@ class CheckpointManager:
                 (tmp / "manifest.json").write_text(json.dumps(manifest))
                 tmp.rename(final)                    # atomic commit
                 self._gc()
-            except BaseException as e:               # surfaced on wait()
+            except BaseException as e:  # pul-lint: disable=PUL105 — trampolined to wait()
                 self._last_error = e
 
         if self.cfg.async_write and not block:

@@ -155,7 +155,16 @@ class DMAEngine:
         `interleave=False` is the paper's baseline: synchronous load ->
         compute -> synchronous flush, no overlap (the "no PL / 1 Tasklet"
         configuration of Experiment 1).
+
+        The plan is statically verified before execution (coverage, issue
+        ordering, FIFO discipline — `repro.analysis.plan_verifier`); a
+        corrupted plan raises PlanError instead of simulating garbage.
         """
+        # imported lazily: analysis.plan_verifier imports core.pul, and a
+        # module-level import here would deadlock the package init cycle
+        from repro.analysis.plan_verifier import verify_stream_plan
+        verify_stream_plan(cfg, n_blocks=n_blocks, block_bytes=block_bytes,
+                           engine_fifo_depth=self.fifo_depth)
         pre = _Channel(self.tier, Direction.PRELOAD, self.fifo_depth)
         unl = _Channel(self.tier, Direction.UNLOAD, self.fifo_depth)
         self.last_channels = (pre, unl)     # exposed for invariant tests

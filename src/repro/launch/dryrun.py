@@ -263,8 +263,16 @@ def main(argv=None):
                         res = dryrun_cell(arch, shape_name,
                                           multi_pod=(mesh_name == "multi"),
                                           accum=args.accum)
+                    except (KeyboardInterrupt, SystemExit):
+                        # never swallow an interrupt into an "error" cell:
+                        # the sweep must stop, not record a bogus failure
+                        raise
                     except Exception as e:
                         traceback.print_exc()
+                        print(f"[dryrun] {tag}: swallowed "
+                              f"{type(e).__name__} ({e}); recorded as an "
+                              "error cell and continuing the sweep",
+                              file=sys.stderr)
                         res = {"arch": arch, "shape": shape_name,
                                "mesh": mesh_name, "status": "error",
                                "error": f"{type(e).__name__}: {e}"}

@@ -8,7 +8,8 @@ from repro.serving.engine import (
     mean,
     percentile,
 )
-from repro.serving.kv_pages import KVPagePool, PackedKVLayout, PageConfig
+from repro.serving.kv_pages import (KVPagePool, PackedKVLayout,
+                                    PageConfig, PoolMetrics)
 from repro.serving.scheduler import (
     POLICIES,
     AdmissionScheduler,
@@ -18,7 +19,7 @@ from repro.serving.scheduler import (
 __all__ = [
     "EngineConfig", "Request", "ServingEngine",
     "PagedEngineConfig", "PagedServingEngine", "EngineMetrics",
-    "KVPagePool", "PackedKVLayout", "PageConfig",
+    "KVPagePool", "PackedKVLayout", "PageConfig", "PoolMetrics",
     "AdmissionScheduler", "SchedulerConfig", "POLICIES",
     "percentile", "mean",
 ]

@@ -261,6 +261,13 @@ class PagedEngineConfig:
                                     # prefill at admission)
     greedy: bool = True
     sample_seed: int = 0            # rng seed for greedy=False sampling
+    shadow_check: bool = False      # record the page-lifecycle trace and
+                                    # replay it through the sanitizer
+                                    # (repro.analysis) EVERY tick, raising
+                                    # LifecycleViolationError at the tick
+                                    # that broke the contract. Test-only:
+                                    # off (default) => no trace, no checker,
+                                    # zero hot-path overhead
 
 
 @dataclasses.dataclass
@@ -318,8 +325,16 @@ class PagedServingEngine:
         self.pool = KVPagePool(
             PageConfig(page_tokens=P, hot_frames=hot + 2,
                        preload_distance=engine_cfg.preload_distance,
-                       share_prefix_pages=engine_cfg.share_prefix_pages),
+                       share_prefix_pages=engine_cfg.share_prefix_pages,
+                       trace=engine_cfg.shadow_check),
             max(self.layout.features, 1), gqa_group=gqa)
+        # shadow mode: an incremental lifecycle checker consumes the pool
+        # trace every tick (O(new events) per tick), so a violation names
+        # the offending event at the tick it happened
+        self._shadow_checker = None
+        if engine_cfg.shadow_check:
+            from repro.analysis.sanitizer import LifecycleChecker
+            self._shadow_checker = LifecycleChecker()
         self.scheduler = AdmissionScheduler(SchedulerConfig(
             prefill_buckets=engine_cfg.prefill_buckets,
             max_active_tokens=engine_cfg.max_active_tokens or B * S,
@@ -968,11 +983,22 @@ class PagedServingEngine:
         self._tick += 1
         self.metrics.ticks = self._tick
         self.metrics.wall_time += time.perf_counter() - t0
+        if self._shadow_checker is not None:
+            self._run_shadow_check()
         if self.metrics_hook:
             self.metrics_hook(self.snapshot(page_faults_step=faults))
 
+    def _run_shadow_check(self):
+        """Feed the tick's new trace events through the lifecycle checker;
+        raise at the first violation (with event provenance)."""
+        from repro.analysis.sanitizer import LifecycleViolationError
+        fresh = self._shadow_checker.feed_log(self.pool.trace)
+        if fresh:
+            raise LifecycleViolationError(fresh)
+
     def snapshot(self, **extra) -> Dict[str, Any]:
         pm = self.pool.metrics
+        pm.validate()   # counter-arithmetic invariants (PoolMetrics docs)
         lat = self.scheduler.queue_latencies()
         snap = {
             "tick": self._tick,

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.events import EventKind, TraceLog
 from repro.configs.base import ModelConfig
 from repro.core.dma import DMAEngine, KVPageWorkload, run_kv_page_workload
 from repro.core.planner import kv_page_flops, plan_kv_page_stream
@@ -96,13 +97,13 @@ class PackedKVLayout:
         self.features = off
 
     # ------------------------------------------------------------------ #
-    def _get(self, tree, keys):
+    def _get(self, tree: Any, keys: Tuple[str, ...]) -> Any:
         node = tree
         for k in keys:
             node = node[k]
         return node
 
-    def _leaf_rows(self, leaf, e: _LeafEntry):
+    def _leaf_rows(self, leaf: jnp.ndarray, e: _LeafEntry) -> jnp.ndarray:
         """(B, S, nfeat) view of one cache leaf."""
         if e.grouped:                       # (G, B, S, feat...) -> (B, S, -1)
             G, B, S = leaf.shape[:3]
@@ -111,13 +112,13 @@ class PackedKVLayout:
         B, S = leaf.shape[:2]
         return leaf.reshape(B, S, -1)
 
-    def pack(self, tree) -> jnp.ndarray:
+    def pack(self, tree: Any) -> jnp.ndarray:
         """Cache tree -> (B, S, F) packed KV rows (S = tree's seq size)."""
         return jnp.concatenate(
             [self._leaf_rows(self._get(tree, e.keys), e)
              for e in self.entries], axis=-1)
 
-    def pack_rows(self, tree, idx) -> jnp.ndarray:
+    def pack_rows(self, tree: Any, idx: jnp.ndarray) -> jnp.ndarray:
         """One row per slot: (B, F) at per-slot positions `idx` (B,)."""
         B = idx.shape[0]
         rows = jnp.arange(B)
@@ -133,7 +134,7 @@ class PackedKVLayout:
                 outs.append(leaf[rows, i].reshape(B, -1))
         return jnp.concatenate(outs, axis=-1)
 
-    def pack_new_rows(self, tree) -> jnp.ndarray:
+    def pack_new_rows(self, tree: Any) -> jnp.ndarray:
         """Pack a paged-decode output tree's NEW-TOKEN rows into (B, F).
 
         `tree` is the tree returned by the kernel-true paged decode: every
@@ -150,7 +151,7 @@ class PackedKVLayout:
                 outs.append(leaf.reshape(leaf.shape[0], -1))
         return jnp.concatenate(outs, axis=-1)
 
-    def page_views(self, tree, store: jnp.ndarray):
+    def page_views(self, tree: Any, store: jnp.ndarray) -> Any:
         """Return `tree` with every pageable leaf replaced by a kernel-
         addressable view of the physical page `store` ((NP, P, F)).
 
@@ -177,7 +178,7 @@ class PackedKVLayout:
             node[e.keys[-1]] = view
         return new
 
-    def unpack_into(self, tree, packed: jnp.ndarray):
+    def unpack_into(self, tree: Any, packed: jnp.ndarray) -> Any:
         """Return `tree` with every pageable leaf replaced from `packed`
         ((B, S, F)); non-pageable leaves (SSM states, idx) pass through."""
         B, S, _ = packed.shape
@@ -212,6 +213,10 @@ class PageConfig:
     preload_distance: Optional[int] = None   # None -> planner d*
     fifo_depth: int = 64
     share_prefix_pages: bool = True
+    trace: bool = False             # record page-lifecycle events for the
+                                    # sanitizer (repro.analysis); off = the
+                                    # pool never touches the trace path, so
+                                    # production pays zero overhead
 
     def __post_init__(self):
         if self.page_tokens % TPU_SUBLANE != 0:
@@ -236,6 +241,44 @@ class PoolMetrics:
         if self.modeled_restore_time <= 0:
             return 1.0
         return 1.0 - self.modeled_restore_stall / self.modeled_restore_time
+
+    def validate(self) -> None:
+        """Cross-check the counters' arithmetic invariants; raises
+        ValueError naming the broken one. Called from the engine's metrics
+        hook so a drifted counter surfaces at the snapshot that drifted,
+        not in a downstream report."""
+        for name in ("page_faults", "evictions", "shared_hits",
+                     "pages_allocated"):
+            v = getattr(self, name)
+            if v < 0:
+                raise ValueError(f"PoolMetrics.{name} is negative ({v})")
+        if self.modeled_restore_time < 0 or self.modeled_restore_stall < 0:
+            raise ValueError("PoolMetrics modeled restore times are negative")
+        # every restore re-loads a page that previously spilled: the planned
+        # preloads (PRELOAD descriptors) must pair 1:1 with page faults, and
+        # can never outnumber the evictions that created cold copies
+        preloads = sum(1 for d in self.descriptors
+                       if d.direction is Direction.PRELOAD)
+        unloads = sum(1 for d in self.descriptors
+                      if d.direction is Direction.UNLOAD)
+        if preloads != self.page_faults:
+            raise ValueError(
+                f"PoolMetrics: {preloads} PRELOAD descriptors but "
+                f"{self.page_faults} page faults (restores must be planned)")
+        if unloads != self.evictions:
+            raise ValueError(
+                f"PoolMetrics: {unloads} UNLOAD descriptors but "
+                f"{self.evictions} evictions")
+        if self.page_faults > self.evictions:
+            raise ValueError(
+                f"PoolMetrics: {self.page_faults} restores exceed "
+                f"{self.evictions} evictions — a page was restored that "
+                "never spilled")
+        hidden = self.modeled_latency_hidden
+        if not 0.0 <= hidden <= 1.0:
+            raise ValueError(
+                f"PoolMetrics.modeled_latency_hidden = {hidden} out of "
+                "[0, 1]")
 
 
 @dataclasses.dataclass
@@ -271,6 +314,10 @@ class KVPagePool:
         self.cold: Dict[int, np.ndarray] = {}
         self.prefix_index: Dict[tuple, int] = {}
         self.metrics = PoolMetrics()
+        # lifecycle event trace for the sanitizer (repro.analysis); None
+        # when tracing is off — every emission site guards on this, so the
+        # untraced hot path never builds an event
+        self.trace: Optional[TraceLog] = TraceLog() if pcfg.trace else None
         self._next_id = 1
         self._clock = 0
         # restore planning: d* from page transfer time vs per-page compute
@@ -297,8 +344,13 @@ class KVPagePool:
         return sum(1 for m in self.pages.values() if m.frame is not None)
 
     # ------------------------------------------------------------------ #
-    def tick(self):
+    def _emit(self, kind: EventKind, **fields) -> None:
+        if self.trace is not None:
+            self.trace.emit(self._clock, kind, **fields)
+
+    def tick(self) -> None:
         self._clock += 1
+        self._emit(EventKind.TICK)
 
     def alloc(self, shared_key: Optional[tuple] = None, *,
               needed: Sequence[int] = ()) -> int:
@@ -315,6 +367,8 @@ class KVPagePool:
         if shared_key is not None:
             self.prefix_index[shared_key] = pid
         self.metrics.pages_allocated += 1
+        self._emit(EventKind.ALLOC, pid=pid, frame=frame, refcount=1,
+                   shared_key=shared_key)
         return pid
 
     def lookup_shared(self, key: tuple) -> Optional[int]:
@@ -324,14 +378,18 @@ class KVPagePool:
         if pid is not None:
             self.pages[pid].refcount += 1
             self.metrics.shared_hits += 1
+            self._emit(EventKind.REF, pid=pid,
+                       refcount=self.pages[pid].refcount, shared_key=key)
         return pid
 
-    def ref(self, pid: int):
+    def ref(self, pid: int) -> None:
         self.pages[pid].refcount += 1
+        self._emit(EventKind.REF, pid=pid, refcount=self.pages[pid].refcount)
 
-    def unref(self, pid: int):
+    def unref(self, pid: int) -> None:
         meta = self.pages[pid]
         meta.refcount -= 1
+        self._emit(EventKind.UNREF, pid=pid, refcount=meta.refcount)
         if meta.refcount > 0:
             return
         if meta.shared_key is not None:
@@ -340,9 +398,10 @@ class KVPagePool:
             self.free_frames.append(meta.frame)
         self.cold.pop(pid, None)
         del self.pages[pid]
+        self._emit(EventKind.FREE, pid=pid)
 
     # ------------------------------------------------------------------ #
-    def note_deadline(self, pids: Sequence[int], deadline: float):
+    def note_deadline(self, pids: Sequence[int], deadline: float) -> None:
         """Tag pages with their owning request's absolute TTFT-deadline
         tick (inf: no deadline). Eviction orders victims by LATEST deadline
         first — a page whose request has slack can afford the restore
@@ -351,6 +410,7 @@ class KVPagePool:
         requester's urgency (a deliberate, cheap approximation)."""
         for pid in pids:
             self.pages[pid].deadline = deadline
+            self._emit(EventKind.DEADLINE, pid=pid, deadline=deadline)
 
     def _take_frame(self, needed: Sequence[int]) -> int:
         """Get a free hot frame, evicting pages not in `needed` — latest
@@ -366,13 +426,21 @@ class KVPagePool:
                 f"hot tier exhausted: {self.capacity} frames all needed this "
                 "step; raise PageConfig.hot_frames or admit fewer tokens")
         _, victim = victims[0]
-        self.evict(victim)
+        self.evict(victim, cause="steal", pinned=needed)
         return self.free_frames.pop()
 
-    def evict(self, pid: int):
-        """Hot -> cold: real data movement + an UNLOAD descriptor."""
+    def evict(self, pid: int, *, cause: str = "explicit",
+              pinned: Sequence[int] = ()) -> None:
+        """Hot -> cold: real data movement + an UNLOAD descriptor.
+
+        `cause` is sanitizer provenance: "steal" marks capacity evictions
+        (which must follow the deadline-then-LRU victim order over the
+        non-`pinned` hot pages); "explicit" marks policy-driven spills
+        (preemption, pause) that are exempt from victim-order checks."""
         meta = self.pages[pid]
         assert meta.frame is not None, f"page {pid} already cold"
+        self._emit(EventKind.EVICT, pid=pid, frame=meta.frame, cause=cause,
+                   pinned=tuple(sorted(pinned)))
         self.cold[pid] = np.asarray(self.store[meta.frame])
         self.free_frames.append(meta.frame)
         self.metrics.evictions += 1
@@ -381,7 +449,7 @@ class KVPagePool:
             dst=pid * self.page_bytes, nbytes=self.page_bytes, tag=pid))
         meta.frame = None
 
-    def evict_pages(self, pids: Sequence[int]):
+    def evict_pages(self, pids: Sequence[int]) -> None:
         for pid in pids:
             if self.pages[pid].frame is not None:
                 self.evict(pid)
@@ -399,6 +467,7 @@ class KVPagePool:
         for pid in pids:
             meta = self.pages[pid]
             meta.last_used = self._clock
+            self._emit(EventKind.TOUCH, pid=pid)
             if meta.frame is None:
                 faults.append(pid)
         for pid in faults:
@@ -407,6 +476,7 @@ class KVPagePool:
             data = self.cold.pop(pid)
             self.store = self.store.at[frame].set(jnp.asarray(data))
             meta.frame = frame
+            self._emit(EventKind.RESTORE, pid=pid, frame=frame)
             self.metrics.descriptors.append(TransferRequest(
                 Direction.PRELOAD, src=pid * self.page_bytes,
                 dst=frame * self.page_bytes, nbytes=self.page_bytes, tag=pid))
@@ -430,14 +500,21 @@ class KVPagePool:
         for i, pid in enumerate(pids):
             if pid is None:
                 continue
+            if self.trace is not None:      # keep the per-page loop lean
+                self._emit(EventKind.READ, pid=pid,
+                           frame=self.pages[pid].frame)
             frame = self.pages[pid].frame
             assert frame is not None, f"page {pid} is cold at gather time"
             out[i] = frame
         return out
 
-    def write_page(self, pid: int, rows: jnp.ndarray, n_valid: int):
+    def write_page(self, pid: int, rows: jnp.ndarray, n_valid: int) -> None:
         """Fill (a prefix of) one hot page with packed KV rows."""
         meta = self.pages[pid]
+        # the event precedes the scatter so a write to a cold page is in
+        # the trace even if the scatter itself corrupts the store
+        self._emit(EventKind.WRITE_PAGE, pid=pid, frame=meta.frame,
+                   n_valid=n_valid)
         P = self.cfg.page_tokens
         pad = P - n_valid
         if pad:
@@ -445,9 +522,13 @@ class KVPagePool:
         self.store = self.store.at[meta.frame].set(rows.astype(self.dtype))
 
     def write_rows(self, frames: np.ndarray, offsets: np.ndarray,
-                   rows: jnp.ndarray):
+                   rows: jnp.ndarray) -> None:
         """Scatter one packed row per slot into (frame, offset) positions.
         Inactive slots should point at TRASH_FRAME."""
+        # the event precedes validation so a zero-frame write reaches the
+        # sanitizer trace even though the assert stops the scatter
+        self._emit(EventKind.WRITE_ROWS,
+                   frames=tuple(int(f) for f in frames))
         # validate BEFORE the scatter: the reserved zero frame backs every
         # unallocated page-table slot and must stay all-zeros
         assert ZERO_FRAME not in frames.tolist(), "write to the zero frame"

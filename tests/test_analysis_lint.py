@@ -1,0 +1,325 @@
+"""jit-safety lint: one fixture per rule, plus waivers and the clean-tree
+gate (``src/repro`` must lint clean — the same check CI runs)."""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+pytestmark = pytest.mark.analysis
+
+
+def _lint(code):
+    return lint_source(textwrap.dedent(code), "fixture.py")
+
+
+def _rules(code):
+    return [f.rule for f in _lint(code)]
+
+
+# ======================================================================== #
+# PUL101: Python control flow on traced values
+# ======================================================================== #
+
+def test_traced_branch_in_jitted_function_flagged():
+    findings = _lint("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:           # trace-time branch on a traced value
+                return x
+            return -x
+    """)
+    assert [f.rule for f in findings] == ["PUL101"]
+    assert findings[0].line == 6
+    assert "x" in findings[0].message
+
+
+def test_traced_while_via_annotation_flagged_outside_jit():
+    assert _rules("""
+        import jax
+
+        def host_fn(x: jax.Array):
+            while x.sum() > 0:
+                x = x - 1
+    """) == ["PUL101"]
+
+
+def test_branch_on_static_shape_is_clean():
+    assert _rules("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x.shape[0] > 8:      # shapes are static under tracing
+                return x[:8]
+            if x is None or len(x.shape) == 1:
+                return x
+            return x
+    """) == []
+
+
+def test_branch_on_host_annotated_value_is_clean():
+    assert _rules("""
+        import jax
+
+        @jax.jit
+        def step(x, n: int):
+            if n > 4:               # n is a static/python argument
+                return x * n
+            return x
+    """) == []
+
+
+def test_traced_propagates_through_assignment():
+    assert _rules("""
+        import jax.numpy as jnp
+
+        def f_kernel(x_ref, o_ref):
+            y = x_ref[...] * 2
+            if y[0] > 0:
+                o_ref[...] = y
+    """) == ["PUL101"]
+
+
+def test_pallas_call_argument_is_a_jit_context():
+    assert _rules("""
+        import functools
+        from jax.experimental import pallas as pl
+
+        def _body(x_ref, o_ref):
+            if x_ref[0]:
+                o_ref[...] = x_ref[...]
+
+        def run(x):
+            kern = functools.partial(_body)
+            return pl.pallas_call(kern, out_shape=x)(x)
+    """) == ["PUL101"]
+
+
+# ======================================================================== #
+# PUL102: host syncs
+# ======================================================================== #
+
+def test_item_in_jit_flagged():
+    assert _rules("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x.sum().item()
+    """) == ["PUL102"]
+
+
+def test_float_cast_of_traced_flagged():
+    assert _rules("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            return float(x[0])
+    """) == ["PUL102"]
+
+
+def test_np_asarray_of_traced_flagged():
+    assert _rules("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def step(x):
+            return np.asarray(x)
+    """) == ["PUL102"]
+
+
+def test_host_sync_outside_jit_is_clean():
+    assert _rules("""
+        import numpy as np
+
+        def report(x):
+            return float(np.asarray(x).mean())
+    """) == []
+
+
+# ======================================================================== #
+# PUL103: non-static BlockSpec shapes
+# ======================================================================== #
+
+def test_traced_blockspec_shape_flagged():
+    assert _rules("""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def build(n: jax.Array):
+            return pl.BlockSpec((n, 128), lambda i: (i, 0))
+    """) == ["PUL103"]
+
+
+def test_static_blockspec_is_clean():
+    assert _rules("""
+        from jax.experimental import pallas as pl
+
+        def build(rows: int):
+            return pl.BlockSpec((rows, 128), lambda i: (i, 0))
+    """) == []
+
+
+def test_memory_space_only_blockspec_is_clean():
+    """The repo's kernels build BlockSpecs with only memory_space kwargs."""
+    assert _rules("""
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def specs():
+            return [pl.BlockSpec(memory_space=pltpu.SMEM),
+                    pl.BlockSpec(memory_space=pl.ANY)]
+    """) == []
+
+
+# ======================================================================== #
+# PUL104: mutable defaults
+# ======================================================================== #
+
+def test_mutable_default_flagged():
+    findings = _lint("""
+        def admit(reqs=[]):
+            return reqs
+    """)
+    assert [f.rule for f in findings] == ["PUL104"]
+    assert "admit" in findings[0].message
+
+
+def test_none_default_is_clean():
+    assert _rules("""
+        def admit(reqs=None, cfg=(), tag=""):
+            return reqs or []
+    """) == []
+
+
+# ======================================================================== #
+# PUL105: swallowed exceptions
+# ======================================================================== #
+
+def test_bare_except_flagged():
+    assert _rules("""
+        def f():
+            try:
+                g()
+            except:
+                pass
+    """) == ["PUL105"]
+
+
+def test_base_exception_without_reraise_flagged():
+    assert _rules("""
+        def f():
+            try:
+                g()
+            except BaseException:
+                cleanup()
+    """) == ["PUL105"]
+
+
+def test_base_exception_with_reraise_is_clean():
+    assert _rules("""
+        def f():
+            try:
+                g()
+            except BaseException:
+                cleanup()
+                raise
+    """) == []
+
+
+def test_silent_exception_swallow_flagged():
+    """The dryrun.py regression shape: except Exception whose handler
+    neither re-raises nor looks at the exception."""
+    assert _rules("""
+        def sweep():
+            try:
+                run()
+            except Exception:
+                results = "error"
+    """) == ["PUL105"]
+
+
+def test_logged_exception_is_clean():
+    assert _rules("""
+        import traceback
+
+        def sweep():
+            try:
+                run()
+            except Exception as e:
+                traceback.print_exc()
+                print(f"swallowed {type(e).__name__}")
+    """) == []
+
+
+def test_narrow_except_is_clean():
+    assert _rules("""
+        def f():
+            try:
+                g()
+            except (KeyError, ValueError):
+                pass
+    """) == []
+
+
+# ======================================================================== #
+# waivers + infrastructure
+# ======================================================================== #
+
+def test_waiver_comment_suppresses_finding():
+    assert _rules("""
+        def f():
+            try:
+                g()
+            except:  # pul-lint: disable=PUL105
+                pass
+    """) == []
+
+
+def test_waiver_all_suppresses_everything_on_the_line():
+    assert _rules("""
+        def admit(reqs=[]):  # pul-lint: disable=all
+            return reqs
+    """) == []
+
+
+def test_waiver_for_other_rule_does_not_suppress():
+    assert _rules("""
+        def admit(reqs=[]):  # pul-lint: disable=PUL101
+            return reqs
+    """) == ["PUL104"]
+
+
+def test_findings_carry_location():
+    f = _lint("""
+        def admit(reqs=[]):
+            return reqs
+    """)[0]
+    assert f.path == "fixture.py" and f.line == 2
+    assert "fixture.py:2" in f.describe()
+
+
+def test_rule_catalog_is_complete():
+    assert set(RULES) == {"PUL101", "PUL102", "PUL103", "PUL104", "PUL105"}
+
+
+# ======================================================================== #
+# the CI gate: the real tree lints clean
+# ======================================================================== #
+
+def test_src_repro_lints_clean():
+    root = Path(__file__).resolve().parent.parent
+    findings = lint_paths([root / "src" / "repro"])
+    assert findings == [], "\n".join(f.describe() for f in findings)
+
+
+def test_benchmarks_and_tools_lint_clean():
+    root = Path(__file__).resolve().parent.parent
+    findings = lint_paths([root / "benchmarks", root / "tools"])
+    assert findings == [], "\n".join(f.describe() for f in findings)

@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Run the PUL jit-safety lint over the codebase.
+
+  PYTHONPATH=src python tools/run_lint.py [paths...]   # default: src/repro
+
+Exits nonzero if any unwaived finding remains. Waive an intended pattern
+inline with `# pul-lint: disable=PUL101` on the flagged line.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.lint import RULES, lint_paths
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to lint (default: src/repro)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args()
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    findings = lint_paths([Path(p) for p in args.paths])
+    for f in findings:
+        print(f.describe())
+    if findings:
+        print(f"\n{len(findings)} finding(s). Fix, or waive intended lines "
+              "with `# pul-lint: disable=<rule>`.", file=sys.stderr)
+        return 1
+    print(f"pul-lint: clean ({', '.join(args.paths)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
