@@ -14,16 +14,18 @@ sys.path.insert(0, "src")
 
 import argparse
 
-from repro.analysis.plan_verifier import verify_kv_page_plan
+from repro.analysis.plan_verifier import diff_fifo_occupancy, verify_kv_page_plan
 from repro.core import (
     DMAEngine,
     KVPageWorkload,
     PES,
+    PULConfig,
     TIERS,
     kv_page_latency_hidden,
     plan_kv_page_stream,
     run_kv_page_workload,
 )
+from repro.obs import Tracer, validate_chrome_trace
 
 
 def main():
@@ -35,6 +37,13 @@ def main():
     ap.add_argument("--gqa", type=int, default=4)
     ap.add_argument("--pages-per-step", type=int, default=4)
     ap.add_argument("--steps", type=int, default=256)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="re-run the d* row with a traced DMAEngine, write "
+                         "a Chrome/Perfetto trace (descriptor spans, FIFO "
+                         "occupancy counters, back-pressure stalls) to "
+                         "PATH, and diff the executed occupancy against "
+                         "the plan verifier's symbolic schedule — exit 1 "
+                         "if they diverge")
     args = ap.parse_args()
 
     tier, pe = TIERS[args.tier], PES[args.pe]
@@ -73,6 +82,31 @@ def main():
     print(f"\ninterleaved vs phase-separated at d*: "
           f"{base.total_time / star.total_time:.2f}x")
 
+    if args.trace:
+        tracer = Tracer()
+        eng = DMAEngine(tier, pe, tracer=tracer)
+        run_kv_page_workload(eng, wl, distance=plan.cfg.distance)
+        doc = tracer.to_chrome(args.trace)
+        errs = validate_chrome_trace(doc)
+        assert not errs, "\n".join(errs)
+        print(f"\ntrace: {len(doc['traceEvents'])} events -> {args.trace}")
+        # the traced run's executed FIFO occupancy must match the plan
+        # verifier's symbolic schedule (same cfg run_kv_page_workload built)
+        cfg = PULConfig(distance=min(plan.cfg.distance, eng.fifo_depth),
+                        fifo_depth=eng.fifo_depth, unload_distance=1)
+        pre, _ = eng.last_channels
+        diff = diff_fifo_occupancy(cfg, n_blocks=wl.n_pages, channel=pre,
+                                   engine_fifo_depth=eng.fifo_depth)
+        if diff:
+            print("FIFO occupancy diverges from the symbolic schedule:")
+            for line in diff:
+                print(f"  {line}")
+            return 1
+        print(f"FIFO occupancy matches the symbolic schedule "
+              f"({len(pre.occupancy_log)} enqueues, high-water "
+              f"{pre.max_outstanding} @ t={pre.high_water_time * 1e6:.1f}us)")
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.obs import Tracer, validate_chrome_trace
 from repro.serving import (
     POLICIES,
     PagedEngineConfig,
@@ -76,12 +77,13 @@ def _prompts(vocab):
     return longs, shorts
 
 
-def run_policy(cfg, params, policy, steps):
+def run_policy(cfg, params, policy, steps, trace_path=None):
     w = WORKLOAD
+    tracer = Tracer() if trace_path else None
     eng = PagedServingEngine(cfg, params, PagedEngineConfig(
         batch_slots=w["slots"], max_seq=w["max_seq"],
         page_tokens=w["page_tokens"], prefill_buckets=w["buckets"],
-        policy=policy))
+        policy=policy), tracer=tracer)
     longs, shorts = _prompts(cfg.vocab_size)
     for i, p in enumerate(longs):
         eng.submit(Request(rid=i, prompt=list(p),
@@ -109,6 +111,11 @@ def run_policy(cfg, params, policy, steps):
                 + w["short_requests"] * w["short_new"])
     assert m.tokens_emitted == expected, \
         f"{policy}: emitted {m.tokens_emitted}, expected {expected}"
+    if trace_path:
+        doc = tracer.to_chrome(trace_path)
+        errs = validate_chrome_trace(doc)
+        assert not errs, f"{policy} trace: " + "; ".join(errs)
+        print(f"   trace: {len(doc['traceEvents'])} events -> {trace_path}")
     return {
         "policy": policy,
         "wall_time_s": wall,
@@ -131,6 +138,7 @@ def run_policy(cfg, params, policy, steps):
             "violations": sum(1 for t in hi_ttfts
                               if t > WORKLOAD["ttft_deadline"]),
         },
+        "cache_economics": eng.economics(),
     }
 
 
@@ -178,7 +186,14 @@ def main():
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/serving.json")
+    ap.add_argument("--trace-dir", metavar="DIR", default=None,
+                    help="also write a Chrome/Perfetto trace per policy to "
+                         "DIR/trace_<policy>.json (feed two of them to "
+                         "tools/trace_diff.py to see where the policies' "
+                         "decision streams diverge)")
     args = ap.parse_args()
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
 
     cfg = get_config(args.arch).reduced()
     model = build_model(dataclasses.replace(cfg, paged_kv=True))
@@ -187,12 +202,17 @@ def main():
     policies = {}
     for policy in POLICIES:
         print(f"== {policy} ==")
-        policies[policy] = run_policy(cfg, params, policy, args.steps)
+        trace = (os.path.join(args.trace_dir, f"trace_{policy}.json")
+                 if args.trace_dir else None)
+        policies[policy] = run_policy(cfg, params, policy, args.steps,
+                                      trace_path=trace)
         p = policies[policy]
+        hot = p["cache_economics"]["tiers"]["hot"]
         print(f"   ticks={p['ticks']} tok/s={p['tokens_per_sec']:.2f} "
               f"preempt={p['preemptions']} "
               f"hp_ttft={p['high_priority']['ttft_ticks']} "
-              f"hp_violations={p['high_priority']['violations']}")
+              f"hp_violations={p['high_priority']['violations']} "
+              f"hot_B/tok={hot['bytes_per_token']:.0f}")
 
     failures = []
     if policies["fcfs"]["high_priority"]["violations"] < 1:

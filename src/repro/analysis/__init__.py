@@ -23,6 +23,7 @@ from repro.analysis.events import EventKind, PageEvent, TraceLog
 from repro.analysis.plan_verifier import (
     PlanError,
     PlanReport,
+    diff_fifo_occupancy,
     verify_kv_page_plan,
     verify_stream_plan,
 )
@@ -39,4 +40,5 @@ __all__ = [
     "LifecycleChecker", "LifecycleViolationError", "Violation",
     "check_page_trace", "format_violations",
     "PlanError", "PlanReport", "verify_stream_plan", "verify_kv_page_plan",
+    "diff_fifo_occupancy",
 ]

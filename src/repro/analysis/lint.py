@@ -23,6 +23,14 @@ hazards that are legal Python but wrong (or silently catastrophic) inside
                              SystemExit), or an ``except Exception`` whose
                              handler neither re-raises nor inspects the
                              exception — a silent swallow.
+  PUL106 unbalanced-span     Unequal ``.begin_span(`` / ``.end_span(`` call
+                             counts within one function scope: an exception
+                             between them leaves the tracer's B/E stack
+                             open and every later span mis-nests. Use
+                             ``with tracer.span(...)``; work that genuinely
+                             crosses scopes belongs on async spans
+                             (``async_begin``/``async_end``), which pair by
+                             id and are exempt.
 
 Traced-vs-host classification is annotation-driven, not heuristic: a
 parameter annotated ``jax.Array`` / ``jnp.ndarray`` is traced; any other
@@ -52,6 +60,7 @@ RULES: Dict[str, str] = {
     "PUL103": "non-static BlockSpec block shape",
     "PUL104": "mutable default argument",
     "PUL105": "swallowed exception",
+    "PUL106": "unbalanced tracer span begin/end",
 }
 
 _WAIVER_RE = re.compile(r"#\s*pul-lint:\s*disable=([A-Za-z0-9,_\s]+|all)")
@@ -384,6 +393,7 @@ class _ModuleLinter(ast.NodeVisitor):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 self._lint_function(node)
                 self._check_mutable_defaults(node)
+                self._check_span_balance(node)
             elif isinstance(node, ast.Lambda):
                 pass                    # params traced only via jit wrap
             elif isinstance(node, ast.Try):
@@ -419,6 +429,38 @@ class _ModuleLinter(ast.NodeVisitor):
                     col=d.col_offset,
                     message=f"mutable default argument in {fn.name}(): "
                             "shared across calls; use None + in-body init"))
+
+    def _check_span_balance(self, fn) -> None:
+        """PUL106: `.begin_span(` / `.end_span(` counts must balance within
+        one function scope (nested defs/lambdas are their own scopes).
+        Async spans (`async_begin`/`async_end`) pair by id across scopes by
+        design and are exempt."""
+        begins = ends = 0
+        first: Optional[ast.Call] = None
+        stack: List[ast.AST] = list(fn.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue                # separate scope, checked on its own
+            if isinstance(node, ast.Call) and isinstance(node.func,
+                                                         ast.Attribute):
+                if node.func.attr == "begin_span":
+                    begins += 1
+                    first = first or node
+                elif node.func.attr == "end_span":
+                    ends += 1
+                    first = first or node
+            stack.extend(ast.iter_child_nodes(node))
+        if begins != ends:
+            anchor = first if first is not None else fn
+            self.findings.append(Finding(
+                rule="PUL106", path=self.path, line=anchor.lineno,
+                col=anchor.col_offset,
+                message=f"{fn.name}() opens {begins} sync span(s) but "
+                        f"closes {ends}: an exception in between leaves the "
+                        "trace's B/E stack open. Use `with tracer.span("
+                        "...)`; cross-scope work belongs on async spans"))
 
     def _check_handlers(self, node: ast.Try) -> None:
         for h in node.handlers:

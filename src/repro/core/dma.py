@@ -38,7 +38,7 @@ demands saturates `tier.bandwidth` (the paper's system tops out at 8 GiB/s).
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Any, List, Tuple
 
 from repro.core.pul import (
     Direction,
@@ -47,16 +47,23 @@ from repro.core.pul import (
     PEModel,
     PULConfig,
 )
+from repro.obs.tracer import NULL_TRACER
 
 
 @dataclasses.dataclass
 class _Channel:
     """One serial DMA channel with a FIFO queue.
 
-    Instrumented for the invariant tests: `wire_log` records each request's
-    (enqueue_time, wire_start, wire_end) interval — the wire is the serial
-    resource, so intervals must never overlap — and `max_outstanding` tracks
-    the deepest the FIFO ever got (must stay <= fifo_depth).
+    Instrumented for the invariant tests and the trace layer: `wire_log`
+    records each request's (enqueue_time, wire_start, wire_end) interval —
+    the wire is the serial resource, so intervals must never overlap;
+    `occupancy_log` samples (time, outstanding) at every enqueue — the
+    executed FIFO-occupancy track that `analysis.plan_verifier.
+    diff_fifo_occupancy` diffs against the symbolic schedule;
+    `max_outstanding` tracks the deepest the FIFO ever got (must stay <=
+    fifo_depth) and `high_water_time` the model time it FIRST got there;
+    `stalls` records (wanted, granted) back-pressure intervals where a full
+    FIFO blocked the PE's enqueue.
     """
 
     tier: MemoryTier
@@ -64,7 +71,17 @@ class _Channel:
     fifo_depth: int
     completions: List[float] = dataclasses.field(default_factory=list)
     wire_log: List[tuple] = dataclasses.field(default_factory=list)
+    occupancy_log: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
+    stalls: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
     max_outstanding: int = 0
+    high_water_time: float = 0.0
+    tracer: Any = NULL_TRACER           # repro.obs.Tracer (model-time track)
+    track: str = "dma"
+    ts_offset: float = 0.0              # model-time offset of this run in
+                                        # the trace (batches lay out
+                                        # sequentially, not on top of 0)
     _wire_busy_until: float = 0.0
 
     def enqueue(self, now: float, nbytes: int) -> float:
@@ -75,9 +92,16 @@ class _Channel:
         """
         # FIFO back-pressure: if fifo_depth requests are still pending at
         # `now`, the PE stalls until a slot frees up.
+        wanted = now
         pending = sorted(c for c in self.completions if c > now)
         if len(pending) >= self.fifo_depth:
             now = pending[len(pending) - self.fifo_depth]
+            self.stalls.append((wanted, now))
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    self.track, "backpressure", cat="stall",
+                    ts=(self.ts_offset + wanted) * 1e6,
+                    dur=(now - wanted) * 1e6)
         lat = (self.tier.read_latency if self.direction is Direction.PRELOAD
                else self.tier.write_latency)
         wire_start = max(now, self._wire_busy_until)
@@ -86,7 +110,18 @@ class _Channel:
         self.completions.append(done)
         self.wire_log.append((now, wire_start, self._wire_busy_until))
         outstanding = 1 + sum(1 for c in self.completions[:-1] if c > now)
-        self.max_outstanding = max(self.max_outstanding, outstanding)
+        if outstanding > self.max_outstanding:
+            self.max_outstanding = outstanding
+            self.high_water_time = now      # the occupancy high-water tick
+        self.occupancy_log.append((now, outstanding))
+        if self.tracer.enabled:
+            off = self.ts_offset
+            self.tracer.complete(
+                self.track, self.direction.name, cat="descriptor",
+                ts=(off + now) * 1e6, dur=(done - now) * 1e6,
+                nbytes=nbytes, issue=now, complete=done)
+            self.tracer.counter(self.track, f"{self.track}:occupancy",
+                                outstanding, ts=(off + now) * 1e6)
         return done
 
 
@@ -128,6 +163,7 @@ class DMAEngine:
         issue_cycles: int = 12,
         issue_cycles_cached: int = 4,
         wait_poll_cycles: int = 2,
+        tracer=None,
     ):
         self.tier = tier
         self.pe = pe
@@ -135,6 +171,12 @@ class DMAEngine:
         self.issue_cycles = issue_cycles
         self.issue_cycles_cached = issue_cycles_cached
         self.wait_poll_cycles = wait_poll_cycles
+        # trace layer (repro.obs): per-channel FIFO occupancy + descriptor
+        # spans on model-time tracks; NULL_TRACER = zero overhead
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._trace_clock = 0.0     # model-time offset of the NEXT run's
+                                    # events (successive run_stream batches
+                                    # lay out sequentially in the trace)
 
     def _cyc(self, n: float) -> float:
         return n / self.pe.clock_hz
@@ -165,8 +207,11 @@ class DMAEngine:
         from repro.analysis.plan_verifier import verify_stream_plan
         verify_stream_plan(cfg, n_blocks=n_blocks, block_bytes=block_bytes,
                            engine_fifo_depth=self.fifo_depth)
-        pre = _Channel(self.tier, Direction.PRELOAD, self.fifo_depth)
-        unl = _Channel(self.tier, Direction.UNLOAD, self.fifo_depth)
+        tr, off = self.tracer, self._trace_clock
+        pre = _Channel(self.tier, Direction.PRELOAD, self.fifo_depth,
+                       tracer=tr, track="dma/preload", ts_offset=off)
+        unl = _Channel(self.tier, Direction.UNLOAD, self.fifo_depth,
+                       tracer=tr, track="dma/unload", ts_offset=off)
         self.last_channels = (pre, unl)     # exposed for invariant tests
         t = 0.0
         compute_t = issue_t = stall_t = 0.0
@@ -184,11 +229,18 @@ class DMAEngine:
             t += self._cyc(self.wait_poll_cycles)
             if done > t:
                 stall_t += done - t
+                if tr.enabled:
+                    tr.complete("dma/pe", "stall", cat="stall",
+                                ts=(off + t) * 1e6, dur=(done - t) * 1e6)
                 t = done
 
         def consume(i: int, pre_done, unl_done):
             nonlocal t, compute_t
             wait_until(pre_done[i])
+            if tr.enabled:
+                tr.complete("dma/pe", "compute", cat="compute", block=i,
+                            ts=(off + t) * 1e6,
+                            dur=compute_per_block * 1e6)
             t += compute_per_block
             compute_t += compute_per_block
             if unload_bytes_per_block:
@@ -201,6 +253,26 @@ class DMAEngine:
                 if cfg.unload_distance == 0:   # synchronous-flush baseline
                     wait_until(unl_done[i])
 
+        def finish() -> StreamStats:
+            """Close out the run: advance the trace clock so the next batch
+            lays out after this one, and stamp each channel's occupancy
+            high-water tick (the executed back-pressure evidence the plan
+            verifier cross-checks against its modeled warning)."""
+            if tr.enabled:
+                for ch in (pre, unl):
+                    if ch.occupancy_log:
+                        tr.instant(
+                            ch.track, "fifo-high-water", cat="fifo",
+                            ts=(off + ch.high_water_time) * 1e6,
+                            occupancy=ch.max_outstanding,
+                            model_time=ch.high_water_time,
+                            fifo_depth=ch.fifo_depth,
+                            stalled_enqueues=len(ch.stalls))
+                self._trace_clock = off + t
+            return StreamStats(t, compute_t, issue_t, stall_t,
+                               n_blocks * block_bytes,
+                               n_blocks * unload_bytes_per_block)
+
         if not interleave:
             for i in range(n_blocks):
                 wait_until(issue(pre, block_bytes, first=(i == 0)))
@@ -208,8 +280,7 @@ class DMAEngine:
                 compute_t += compute_per_block
                 if unload_bytes_per_block:
                     wait_until(issue(unl, unload_bytes_per_block, first=(i == 0)))
-            return StreamStats(t, compute_t, issue_t, stall_t,
-                               n_blocks * block_bytes, n_blocks * unload_bytes_per_block)
+            return finish()
 
         d = max(1, min(cfg.distance, n_blocks))
         pre_done = [0.0] * n_blocks
@@ -239,8 +310,7 @@ class DMAEngine:
         # drain the unload queue (final PRELOAD_WAIT of Listing 1)
         if unload_bytes_per_block and n_blocks:
             wait_until(max(unl_done))
-        return StreamStats(t, compute_t, issue_t, stall_t,
-                           n_blocks * block_bytes, n_blocks * unload_bytes_per_block)
+        return finish()
 
     # ------------------------------------------------------------------ #
     def scale_to_pes(self, single: StreamStats, n_pes: int) -> StreamStats:

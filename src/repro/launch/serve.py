@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import zoo
+from repro.obs import Tracer, validate_chrome_trace
 from repro.serving import (
     EngineConfig,
     PagedEngineConfig,
@@ -65,7 +66,18 @@ def main(argv=None):
     ap.add_argument("--ttft-deadline", type=int, default=8,
                     help="TTFT deadline in ticks for high-priority requests")
     ap.add_argument("--log-every", type=int, default=8)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record a unified Chrome/Perfetto trace of the run "
+                         "(engine spans, scheduler decisions, page "
+                         "lifecycle, DMA twin) to PATH")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="dump the final metrics registry (engine counters "
+                         "+ cache economics) to PATH — Prometheus text for "
+                         ".prom, JSON otherwise")
     args = ap.parse_args(argv)
+    if args.dense and (args.trace or args.metrics):
+        ap.error("--trace/--metrics instrument the paged engine; "
+                 "drop --dense")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -85,6 +97,7 @@ def main(argv=None):
             f"  faults {s['page_faults']}  shared {s['shared_page_hits']}"
             f"  hidden {s['modeled_restore_latency_hidden']:.0%}")
             if s["tick"] % args.log_every == 0 else None)
+        tracer = Tracer() if args.trace else None
         eng = PagedServingEngine(cfg, params, PagedEngineConfig(
             batch_slots=args.slots, max_seq=args.max_seq,
             page_tokens=args.page_tokens, hot_pages=args.hot_pages,
@@ -95,7 +108,7 @@ def main(argv=None):
             use_paged_kernel=args.paged_kernel,
             policy=args.policy,
             prefill_chunk_tokens=args.prefill_chunk),
-            metrics_hook=hook)
+            metrics_hook=hook, tracer=tracer)
         print(f"[serve] paged KV: {eng.layout.features} packed features/token"
               f", {args.page_tokens} tokens/page, planned d*="
               f"{eng.pool.distance}")
@@ -125,6 +138,24 @@ def main(argv=None):
               f"{snap['preemptions']}, readmissions {snap['readmissions']}, "
               f"chunk passes {snap['chunk_passes']}, SLO violations "
               f"{snap['slo_violations']}, rejected {snap['rejected']}")
+        econ = eng.economics()
+        for tier, t in econ["tiers"].items():
+            print(f"[serve] {tier} tier: {t['bytes_moved']} bytes moved "
+                  f"({t['bytes_per_token']:.0f} B/token)")
+        if args.trace:
+            doc = eng.tracer.to_chrome(args.trace)
+            errs = validate_chrome_trace(doc)
+            assert not errs, "\n".join(errs)
+            print(f"[serve] trace: {len(doc['traceEvents'])} events -> "
+                  f"{args.trace} (load in ui.perfetto.dev, or "
+                  "tools/trace_view.py)")
+        if args.metrics:
+            reg = eng.metrics_registry()
+            if args.metrics.endswith(".prom"):
+                reg.dump_prometheus(args.metrics)
+            else:
+                reg.dump_json(args.metrics)
+            print(f"[serve] metrics -> {args.metrics}")
 
 
 if __name__ == "__main__":

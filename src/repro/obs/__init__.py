@@ -1,0 +1,37 @@
+"""Unified observability for the PUL serving stack.
+
+Two pieces, both dependency-free (no jax — importable from tools and CI
+jobs without a device runtime):
+
+  - :mod:`repro.obs.tracer`  — structured tracing: synchronous spans,
+    cross-scope async spans, instants, counters, on two clocks (wall µs
+    for the serving engine, model time for the DMA twin), exported as
+    Chrome/Perfetto trace-event JSON. ``NULL_TRACER`` is the default
+    everywhere and makes the whole layer zero-overhead when off.
+  - :mod:`repro.obs.metrics` — flat metrics registry (JSON + Prometheus
+    text exporters) and the cache-economics accounting: bytes moved per
+    token emitted per tier, and prefetch accuracy / timeliness / coverage
+    for planned d* restores.
+"""
+from repro.obs.metrics import (
+    MetricsRegistry,
+    Sample,
+    cache_economics,
+    economics_into_registry,
+)
+from repro.obs.tracer import (
+    NULL_TRACER,
+    NullTracer,
+    TraceEvent,
+    Tracer,
+    load_chrome_trace,
+    page_events_from_chrome,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "TraceEvent",
+    "load_chrome_trace", "validate_chrome_trace", "page_events_from_chrome",
+    "MetricsRegistry", "Sample", "cache_economics",
+    "economics_into_registry",
+]

@@ -64,6 +64,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -73,6 +74,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import zoo
+from repro.obs.metrics import (
+    MetricsRegistry,
+    cache_economics,
+    economics_into_registry,
+)
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.serving.kv_pages import (
     KVPagePool,
     PackedKVLayout,
@@ -297,11 +304,16 @@ class PagedServingEngine:
 
     def __init__(self, cfg: ModelConfig, params,
                  engine_cfg: PagedEngineConfig = PagedEngineConfig(),
-                 metrics_hook: Optional[Callable[[Dict[str, Any]], None]] = None):
+                 metrics_hook: Optional[Callable[[Dict[str, Any]], None]] = None,
+                 tracer: Optional[Tracer] = None):
         self.base_cfg = cfg
         self.model_cfg = dataclasses.replace(cfg, paged_kv=True)
         self.cfg = engine_cfg
         self.metrics_hook = metrics_hook
+        # one tracer threaded through the whole stack (engine spans,
+        # scheduler decisions, page lifecycle, DMA twin); NULL_TRACER (the
+        # default) makes every emission site a no-op
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.model = zoo.build_model(self.model_cfg)
         self.params = params
 
@@ -327,7 +339,8 @@ class PagedServingEngine:
                        preload_distance=engine_cfg.preload_distance,
                        share_prefix_pages=engine_cfg.share_prefix_pages,
                        trace=engine_cfg.shadow_check),
-            max(self.layout.features, 1), gqa_group=gqa)
+            max(self.layout.features, 1), gqa_group=gqa,
+            tracer=self.tracer)
         # shadow mode: an incremental lifecycle checker consumes the pool
         # trace every tick (O(new events) per tick), so a violation names
         # the offending event at the tick it happened
@@ -338,7 +351,8 @@ class PagedServingEngine:
         self.scheduler = AdmissionScheduler(SchedulerConfig(
             prefill_buckets=engine_cfg.prefill_buckets,
             max_active_tokens=engine_cfg.max_active_tokens or B * S,
-            page_tokens=P, policy=engine_cfg.policy, max_seq=S))
+            page_tokens=P, policy=engine_cfg.policy, max_seq=S),
+            tracer=self.tracer)
 
         # compiled entry points: one prefill per bucket, one decode; the
         # kernel-true path binds the planner's d* as the in-kernel preload
@@ -404,6 +418,14 @@ class PagedServingEngine:
             raise ValueError(f"request {req.rid} exceeds the token budget")
         self.requests[req.rid] = req
         self.scheduler.submit(req, self._tick)
+        if self.tracer.enabled:
+            # request lifecycle span: submit -> last token (or rejection);
+            # async because it crosses many engine scopes
+            self.tracer.async_begin(
+                "requests", f"req{req.rid}", req.rid, cat="request",
+                prompt_tokens=len(req.prompt),
+                max_new_tokens=req.max_new_tokens,
+                priority=req.priority, ttft_deadline=req.ttft_deadline)
 
     # ------------------------------------------------------------------ #
     def _live_slots(self) -> List[int]:
@@ -451,6 +473,13 @@ class PagedServingEngine:
             victim = self._preemption_victim(cand)
             if victim is None:
                 return
+            if self.tracer.enabled:
+                policy = self.scheduler.cfg.policy
+                self.tracer.decision(
+                    "preempt", rid=self.slot_req[victim].rid, slot=victim,
+                    for_rid=cand.rid, policy=policy,
+                    reason=("deadline-lookahead" if policy == "slo-edf"
+                            else "priority"))
             self._preempt_to_queue(victim)
             self._place(self._run_admission())
 
@@ -458,6 +487,13 @@ class PagedServingEngine:
         """Route admissions: swapped-out requests resume from saved pages,
         long prompts start chunked prefill, fully-shared prompts skip
         compute, the rest batch into per-bucket prefill groups."""
+        if self.tracer.enabled:
+            for a in admissions:
+                # slot-occupancy span: one per admission episode, keyed by
+                # the occupying request (a preempted request re-opens one)
+                self.tracer.async_begin(
+                    "slots", f"slot{a.slot}", a.request.rid, cat="slot",
+                    slot=a.slot, rid=a.request.rid)
         by_bucket: Dict[int, List[Admission]] = {}
         for a in admissions:
             if a.request.rid in self._swapped:
@@ -554,6 +590,9 @@ class PagedServingEngine:
         self.paused[slot] = False
         self.metrics.preemptions += 1
         self.scheduler.requeue(req, now=self._tick)
+        if self.tracer.enabled:
+            self.tracer.async_end("slots", f"slot{slot}", req.rid,
+                                  cat="slot", preempted=True)
 
     def _resume_swapped(self, a: Admission):
         """Readmit a swapped-out request: saved pages re-attach to the new
@@ -574,6 +613,9 @@ class PagedServingEngine:
             self._chunk[slot] = state["chunk"]
         self.pool.note_deadline(state["pages"], req.deadline_tick())
         self.metrics.readmissions += 1
+        if self.tracer.enabled:
+            self.tracer.decision("resume", rid=req.rid, slot=slot,
+                                 pages=len(state["pages"]))
 
     def _try_shared_prefill(self, a: Admission) -> bool:
         """Admit a request whose WHOLE prompt is already resident as shared
@@ -639,6 +681,10 @@ class PagedServingEngine:
         self.pool.note_deadline(pids, req.deadline_tick())
 
     def _prefill_group(self, bucket: int, group: List[Admission]):
+        with self.tracer.span("engine", f"prefill@{bucket}"):
+            self._prefill_group_inner(bucket, group)
+
+    def _prefill_group_inner(self, bucket: int, group: List[Admission]):
         B, P = self.cfg.batch_slots, self.cfg.page_tokens
         toks = np.zeros((B, bucket), np.int32)
         lengths = np.ones((B,), np.int32)
@@ -694,7 +740,8 @@ class PagedServingEngine:
 
     def _advance_chunks(self):
         for slot in sorted(self._chunk):
-            self._chunk_pass(slot)
+            with self.tracer.span("engine", f"chunk-pass@{slot}"):
+                self._chunk_pass(slot)
 
     def _chunk_pass(self, slot: int):
         """One chunked-prefill pass: extend the slot's prefix by (up to)
@@ -911,7 +958,13 @@ class PagedServingEngine:
             self._finish(slot)
 
     def _finish(self, slot: int):
-        self.slot_req[slot].done = True
+        req = self.slot_req[slot]
+        req.done = True
+        if self.tracer.enabled:
+            self.tracer.async_end("requests", f"req{req.rid}", req.rid,
+                                  cat="request", tokens=len(req.out_tokens))
+            self.tracer.async_end("slots", f"slot{slot}", req.rid,
+                                  cat="slot")
         for pid in self.slot_pages[slot]:
             self.pool.unref(pid)
         self.slot_pages[slot] = []
@@ -958,6 +1011,9 @@ class PagedServingEngine:
         ride through the batched decode step with dummy inputs, which would
         otherwise advance their SSM/conv state."""
         assert self.slot_req[slot] is not None
+        if self.tracer.enabled:
+            self.tracer.instant("engine", "pause", slot=slot,
+                                rid=self.slot_req[slot].rid)
         self.paused[slot] = True
         self._paused_state[slot] = self._nonpageable_rows(slot)
         self.pool.evict_pages(
@@ -969,6 +1025,9 @@ class PagedServingEngine:
         through the planned preload path (counted as page faults), and the
         snapshotted recurrent state is written back."""
         assert self.slot_req[slot] is not None
+        if self.tracer.enabled:
+            self.tracer.instant("engine", "unpause", slot=slot,
+                                rid=self.slot_req[slot].rid)
         self.paused[slot] = False
         saved = self._paused_state.pop(slot, None)
         if saved:
@@ -977,16 +1036,38 @@ class PagedServingEngine:
     # ------------------------------------------------------------------ #
     def step(self):
         t0 = time.perf_counter()
-        self._admit()
-        self._advance_chunks()
-        faults = self._decode_step() or 0
+        tr = self.tracer
+        tr.set_tick(self._tick)
+        with tr.span("engine", "tick"):
+            with tr.span("engine", "admit"):
+                self._admit()
+            self._advance_chunks()
+            with tr.span("engine", "decode"):
+                faults = self._decode_step() or 0
         self._tick += 1
         self.metrics.ticks = self._tick
         self.metrics.wall_time += time.perf_counter() - t0
+        if tr.enabled:
+            tr.counter("gauges", "live_slots", len(self._live_slots()))
+            tr.counter("gauges", "queued", len(self.scheduler))
+            tr.counter("gauges", "hot_pages_in_use", self.pool.hot_in_use())
+            tr.counter("gauges", "page_faults_step", faults)
         if self._shadow_checker is not None:
             self._run_shadow_check()
         if self.metrics_hook:
-            self.metrics_hook(self.snapshot(page_faults_step=faults))
+            # snapshot() runs OUTSIDE the guard: a PoolMetrics invariant
+            # violation must still crash loudly. Only the user-supplied
+            # observer is sandboxed — a broken hook must not take the tick
+            # loop down with it, so it is disabled after its first raise.
+            snap = self.snapshot(page_faults_step=faults)
+            try:
+                self.metrics_hook(snap)
+            except Exception as e:
+                warnings.warn(
+                    f"metrics_hook raised {e!r}; disabling the hook for the "
+                    "rest of this engine's life", RuntimeWarning,
+                    stacklevel=2)
+                self.metrics_hook = None
 
     def _run_shadow_check(self):
         """Feed the tick's new trace events through the lifecycle checker;
@@ -1026,6 +1107,25 @@ class PagedServingEngine:
         }
         snap.update(extra)
         return snap
+
+    def economics(self) -> Dict[str, Any]:
+        """Cache economics of the run so far: bytes moved per token emitted
+        per tier, and prefetch accuracy / timeliness / coverage of the
+        planned d* restores (see ``repro.obs.metrics.cache_economics``)."""
+        return cache_economics(page_bytes=self.pool.page_bytes,
+                               tokens_emitted=self.metrics.tokens_emitted,
+                               pool_metrics=self.pool.metrics)
+
+    def metrics_registry(self) -> MetricsRegistry:
+        """Current counters as a flat registry (JSON / Prometheus export)."""
+        reg = MetricsRegistry()
+        policy = self.scheduler.cfg.policy
+        for k, v in self.snapshot().items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            reg.set(f"pul_engine_{k}", v, policy=policy)
+        economics_into_registry(reg, self.economics(), policy=policy)
+        return reg
 
     def run(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
         """Drive steps until every submitted request completes (or the tick

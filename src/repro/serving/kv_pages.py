@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.analysis.events import EventKind, TraceLog
 from repro.configs.base import ModelConfig
+from repro.obs.tracer import NULL_TRACER
 from repro.core.dma import DMAEngine, KVPageWorkload, run_kv_page_workload
 from repro.core.planner import kv_page_flops, plan_kv_page_stream
 from repro.core.pul import (
@@ -233,6 +234,18 @@ class PoolMetrics:
     pages_allocated: int = 0
     modeled_restore_time: float = 0.0   # DMA-twin time of all restore batches
     modeled_restore_stall: float = 0.0  # PE stall within those batches
+    # cache-economics counters (repro.obs.metrics.cache_economics):
+    bytes_hot_written: int = 0  # bytes scattered into the hot store (prefill
+                                # page fills + decode row writes)
+    # prefetch-quality counters for planned d* restores (accuracy /
+    # timeliness / coverage, per the prefetching survey in PAPERS.md):
+    planned_preloads: int = 0   # restores issued through ensure_hot's
+                                # planned d* batch
+    unplanned_restores: int = 0  # demand restores outside a planned batch
+                                # (none today; exists so a speculative
+                                # planner's misses become visible)
+    useful_preloads: int = 0    # restored pages read before re-eviction
+    wasted_preloads: int = 0    # restored pages evicted/freed unread
     descriptors: List[TransferRequest] = dataclasses.field(default_factory=list)
 
     @property
@@ -248,10 +261,17 @@ class PoolMetrics:
         hook so a drifted counter surfaces at the snapshot that drifted,
         not in a downstream report."""
         for name in ("page_faults", "evictions", "shared_hits",
-                     "pages_allocated"):
+                     "pages_allocated", "bytes_hot_written",
+                     "planned_preloads", "unplanned_restores",
+                     "useful_preloads", "wasted_preloads"):
             v = getattr(self, name)
             if v < 0:
                 raise ValueError(f"PoolMetrics.{name} is negative ({v})")
+        if (self.useful_preloads + self.wasted_preloads
+                > self.planned_preloads + self.unplanned_restores):
+            raise ValueError(
+                "PoolMetrics: more preload outcomes (useful + wasted) than "
+                "restores issued")
         if self.modeled_restore_time < 0 or self.modeled_restore_stall < 0:
             raise ValueError("PoolMetrics modeled restore times are negative")
         # every restore re-loads a page that previously spilled: the planned
@@ -290,6 +310,10 @@ class _PageMeta:
     deadline: float = float("inf")   # owning request's TTFT deadline tick
                                      # (inf: none) — eviction prefers pages
                                      # whose requests can afford the restore
+    pending_read: bool = False  # restored but not yet read: cleared at first
+                                # READ (a useful preload), still set at the
+                                # next evict/free (a wasted one) — the
+                                # prefetch-accuracy bookkeeping
 
 
 ZERO_FRAME = 0      # reserved all-zeros frame (unallocated page-table slots)
@@ -301,12 +325,13 @@ class KVPagePool:
     """Physical page frames + residency + refcounts + tier movement."""
 
     def __init__(self, pcfg: PageConfig, features: int, *,
-                 gqa_group: int = 1, dtype=jnp.bfloat16):
+                 gqa_group: int = 1, dtype=jnp.bfloat16, tracer=None):
         self.cfg = pcfg
         self.features = features
         self.dtype = dtype
         P = pcfg.page_tokens
         self.page_bytes = P * features * jnp.dtype(dtype).itemsize
+        self.row_bytes = features * jnp.dtype(dtype).itemsize
         n = max(pcfg.hot_frames, RESERVED_FRAMES + 1)
         self.store = jnp.zeros((n, P, features), dtype)
         self.free_frames: List[int] = list(range(RESERVED_FRAMES, n))
@@ -318,6 +343,11 @@ class KVPagePool:
         # when tracing is off — every emission site guards on this, so the
         # untraced hot path never builds an event
         self.trace: Optional[TraceLog] = TraceLog() if pcfg.trace else None
+        # unified tracer (repro.obs): page-lifecycle events are bridged into
+        # the same stream as engine spans and DMA descriptors; NULL_TRACER
+        # keeps every emission site a cheap attribute check when off
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._bridge_seq = 0    # event sequence when TraceLog is off
         self._next_id = 1
         self._clock = 0
         # restore planning: d* from page transfer time vs per-page compute
@@ -327,7 +357,8 @@ class KVPagePool:
             itemsize=jnp.dtype(dtype).itemsize)
         self.distance = pcfg.preload_distance or self.plan.cfg.distance
         self._dma = DMAEngine(pcfg.slow_tier, pcfg.pe,
-                              fifo_depth=pcfg.fifo_depth)
+                              fifo_depth=pcfg.fifo_depth,
+                              tracer=self.tracer)
         self._flops_per_page = kv_page_flops(P, features, gqa_group)
 
     # ------------------------------------------------------------------ #
@@ -347,6 +378,11 @@ class KVPagePool:
     def _emit(self, kind: EventKind, **fields) -> None:
         if self.trace is not None:
             self.trace.emit(self._clock, kind, **fields)
+        if self.tracer.enabled:
+            seq = (self.trace.events[-1].seq if self.trace is not None
+                   else self._bridge_seq)
+            self._bridge_seq = seq + 1
+            self.tracer.page_event(seq, self._clock, kind, fields)
 
     def tick(self) -> None:
         self._clock += 1
@@ -392,6 +428,9 @@ class KVPagePool:
         self._emit(EventKind.UNREF, pid=pid, refcount=meta.refcount)
         if meta.refcount > 0:
             return
+        if meta.pending_read:               # freed without ever being read
+            meta.pending_read = False
+            self.metrics.wasted_preloads += 1
         if meta.shared_key is not None:
             self.prefix_index.pop(meta.shared_key, None)
         if meta.frame is not None:
@@ -439,6 +478,9 @@ class KVPagePool:
         (preemption, pause) that are exempt from victim-order checks."""
         meta = self.pages[pid]
         assert meta.frame is not None, f"page {pid} already cold"
+        if meta.pending_read:               # restored but never read before
+            meta.pending_read = False       # spilling again: wasted preload
+            self.metrics.wasted_preloads += 1
         self._emit(EventKind.EVICT, pid=pid, frame=meta.frame, cause=cause,
                    pinned=tuple(sorted(pinned)))
         self.cold[pid] = np.asarray(self.store[meta.frame])
@@ -476,12 +518,14 @@ class KVPagePool:
             data = self.cold.pop(pid)
             self.store = self.store.at[frame].set(jnp.asarray(data))
             meta.frame = frame
+            meta.pending_read = True
             self._emit(EventKind.RESTORE, pid=pid, frame=frame)
             self.metrics.descriptors.append(TransferRequest(
                 Direction.PRELOAD, src=pid * self.page_bytes,
                 dst=frame * self.page_bytes, nbytes=self.page_bytes, tag=pid))
         if faults:
             self.metrics.page_faults += len(faults)
+            self.metrics.planned_preloads += len(faults)
             stats = run_kv_page_workload(
                 self._dma,
                 KVPageWorkload(page_bytes=self.page_bytes,
@@ -500,10 +544,13 @@ class KVPagePool:
         for i, pid in enumerate(pids):
             if pid is None:
                 continue
-            if self.trace is not None:      # keep the per-page loop lean
-                self._emit(EventKind.READ, pid=pid,
-                           frame=self.pages[pid].frame)
-            frame = self.pages[pid].frame
+            meta = self.pages[pid]
+            if meta.pending_read:           # first read since restore:
+                meta.pending_read = False   # the preload was useful
+                self.metrics.useful_preloads += 1
+            if self.trace is not None or self.tracer.enabled:
+                self._emit(EventKind.READ, pid=pid, frame=meta.frame)
+            frame = meta.frame
             assert frame is not None, f"page {pid} is cold at gather time"
             out[i] = frame
         return out
@@ -520,6 +567,7 @@ class KVPagePool:
         if pad:
             rows = jnp.pad(rows[:n_valid], ((0, pad), (0, 0)))
         self.store = self.store.at[meta.frame].set(rows.astype(self.dtype))
+        self.metrics.bytes_hot_written += self.page_bytes
 
     def write_rows(self, frames: np.ndarray, offsets: np.ndarray,
                    rows: jnp.ndarray) -> None:
@@ -532,6 +580,8 @@ class KVPagePool:
         # validate BEFORE the scatter: the reserved zero frame backs every
         # unallocated page-table slot and must stay all-zeros
         assert ZERO_FRAME not in frames.tolist(), "write to the zero frame"
+        live = sum(1 for f in frames.tolist() if f != TRASH_FRAME)
+        self.metrics.bytes_hot_written += live * self.row_bytes
         self.store = self.store.at[
             jnp.asarray(frames), jnp.asarray(offsets)].set(
                 rows.astype(self.dtype))

@@ -34,6 +34,8 @@ import dataclasses
 import math
 from typing import List, Optional, Sequence, Tuple
 
+from repro.obs.tracer import NULL_TRACER
+
 POLICIES = ("fcfs", "priority", "slo-edf")
 
 
@@ -111,8 +113,12 @@ class Admission:
 
 
 class AdmissionScheduler:
-    def __init__(self, cfg: SchedulerConfig):
+    def __init__(self, cfg: SchedulerConfig, tracer=None):
         self.cfg = cfg
+        # repro.obs tracer: every admission outcome is an instant on the
+        # "sched" track with its machine-readable reason — what
+        # tools/trace_diff.py aligns two runs on
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.queue: List[Request] = []
         self.failed: List[Request] = []     # never-admittable rejections
         self.rejected = 0
@@ -192,6 +198,11 @@ class AdmissionScheduler:
         req.error = reason
         self.failed.append(req)
         self.rejected += 1
+        if self.tracer.enabled:
+            self.tracer.decision("reject", rid=req.rid, reason=reason)
+            # close the request's lifecycle span (opened at engine submit)
+            self.tracer.async_end("requests", f"req{req.rid}", req.rid,
+                                  cat="request", failed=True)
 
     # ------------------------------------------------------------------ #
     def admit(
@@ -238,8 +249,18 @@ class AdmissionScheduler:
                                 f"{budget}")
                 continue
             if budget and tokens + cost > budget:
+                if self.tracer.enabled:
+                    self.tracer.decision(
+                        "admission-blocked", rid=req.rid,
+                        reason="token-budget", cost=cost,
+                        active_tokens=tokens, budget=budget)
                 break
             if pages > frames:
+                if self.tracer.enabled:
+                    self.tracer.decision(
+                        "admission-blocked", rid=req.rid,
+                        reason="no-hot-frames", pages=pages,
+                        free_frames=frames)
                 break
             self.queue.pop(0)
             req.admit_tick = now
@@ -248,6 +269,10 @@ class AdmissionScheduler:
             frames -= pages
             slot = free.pop(0)
             out.append(Admission(slot=slot, request=req, bucket=req.bucket))
+            if self.tracer.enabled:
+                self.tracer.decision(
+                    "admit", rid=req.rid, slot=slot, bucket=req.bucket,
+                    policy=self.cfg.policy, resuming=req.resuming)
             if not req.resuming:
                 # queue latency is anchored at FIRST admission; readmission
                 # waits are visible via Request.preemptions instead

@@ -269,6 +269,75 @@ def test_narrow_except_is_clean():
 
 
 # ======================================================================== #
+# PUL106: unbalanced tracer span begin/end
+# ======================================================================== #
+
+def test_unbalanced_begin_span_flagged():
+    findings = _lint("""
+        def step(tracer):
+            tracer.begin_span("engine", "tick")
+            do_work()           # a raise here leaks the open span
+    """)
+    assert [f.rule for f in findings] == ["PUL106"]
+    assert "step" in findings[0].message
+
+
+def test_end_without_begin_flagged():
+    assert _rules("""
+        def close(tracer):
+            tracer.end_span("engine")
+    """) == ["PUL106"]
+
+
+def test_balanced_spans_are_clean():
+    assert _rules("""
+        def step(tracer):
+            tracer.begin_span("engine", "tick")
+            do_work()
+            tracer.end_span("engine")
+    """) == []
+
+
+def test_with_span_is_clean():
+    assert _rules("""
+        def step(tracer):
+            with tracer.span("engine", "tick"):
+                do_work()
+    """) == []
+
+
+def test_async_spans_are_exempt():
+    """Cross-scope lifecycle spans pair by id, not by call scope."""
+    assert _rules("""
+        def submit(tracer, rid):
+            tracer.async_begin("requests", "req", rid)
+
+        def finish(tracer, rid):
+            tracer.async_end("requests", "req", rid)
+    """) == []
+
+
+def test_nested_function_is_its_own_scope():
+    """A balanced pair split across a closure boundary is NOT balanced:
+    each scope is checked on its own."""
+    assert _rules("""
+        def outer(tracer):
+            tracer.begin_span("engine", "tick")
+            def cleanup():
+                tracer.end_span("engine")
+            return cleanup
+    """) == ["PUL106", "PUL106"]
+
+
+def test_pul106_waiver_works():
+    assert _rules("""
+        def step(tracer):
+            tracer.begin_span("engine", "tick")  # pul-lint: disable=PUL106
+            do_work()
+    """) == []
+
+
+# ======================================================================== #
 # waivers + infrastructure
 # ======================================================================== #
 
@@ -306,7 +375,8 @@ def test_findings_carry_location():
 
 
 def test_rule_catalog_is_complete():
-    assert set(RULES) == {"PUL101", "PUL102", "PUL103", "PUL104", "PUL105"}
+    assert set(RULES) == {"PUL101", "PUL102", "PUL103", "PUL104", "PUL105",
+                          "PUL106"}
 
 
 # ======================================================================== #

@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Explain why two PUL serving traces diverged.
+
+  PYTHONPATH=src python tools/trace_diff.py a.json b.json
+      [--expect-diverge | --expect-match]
+
+Two runs of the same request stream can take different eviction/admission
+paths (different policy, hot-tier size, preload distance, ...). This tool
+aligns the *decision streams* of two traces — scheduler decisions (admit /
+reject / admission-blocked / preempt / resume, each carrying its
+machine-readable reason) interleaved with page evict/restore lifecycle
+events — and reports the FIRST point where they diverge, with both sides'
+full arguments. That first divergence is the causal one: everything after
+it runs on different engine state.
+
+Volatile keys (``seq``, ``clock``, ``tick`` — positions in the trace, not
+decisions) are excluded from equality but kept in the report.
+
+Exit codes: 0 = the comparison matched the expectation (``--expect-*``), or
+no expectation was given; 1 = expectation violated. The CI trace-smoke
+golden test runs two eviction policies over one request stream and requires
+``--expect-diverge`` to find a reasoned divergence.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.tracer import load_chrome_trace
+
+# trace positions, not decisions: two runs that decide identically still
+# reach each decision at different ticks/seqs
+VOLATILE_KEYS = ("seq", "clock", "tick")
+
+# page-lifecycle kinds that change future eviction/admission behavior
+# (TOUCH/READ/WRITE noise would drown the comparison in LRU bookkeeping)
+PAGE_KINDS = ("evict", "restore")
+
+
+def decision_stream(doc):
+    """The trace's decision events + page evict/restore events, in file
+    order (the tracer appends in program order). Each item is
+    (label, comparable_args, full_args)."""
+    out = []
+    for ev in doc.get("traceEvents", ()):
+        if ev.get("ph") != "i":
+            continue
+        cat = ev.get("cat")
+        name = ev.get("name", "")
+        if cat == "decision" or (cat == "page" and name in PAGE_KINDS):
+            args = dict(ev.get("args") or {})
+            comparable = {k: v for k, v in args.items()
+                          if k not in VOLATILE_KEYS}
+            out.append((f"{cat}:{name}", comparable, args))
+    return out
+
+
+def _fmt(item):
+    label, _, full = item
+    args = ", ".join(f"{k}={v}" for k, v in sorted(full.items()))
+    return f"{label}({args})"
+
+
+def diff_decisions(a, b):
+    """First divergence between two decision streams, or None.
+
+    Returns (index, explanation) — the explanation names what differs and
+    why it matters (the reason argument when one is present)."""
+    for i, (x, y) in enumerate(zip(a, b)):
+        if x[0] != y[0] or x[1] != y[1]:
+            why = []
+            if x[0] != y[0]:
+                why.append(f"different event kinds: {x[0]} vs {y[0]}")
+            else:
+                keys = sorted(set(x[1]) | set(y[1]))
+                for k in keys:
+                    if x[1].get(k) != y[1].get(k):
+                        why.append(f"{k}: {x[1].get(k)!r} vs {y[1].get(k)!r}")
+            ra, rb = x[1].get("reason"), y[1].get("reason")
+            reason = ra or rb
+            if reason:
+                why.append(f"reason: {ra!r} vs {rb!r}" if ra != rb
+                           else f"reason: {reason!r}")
+            return i, (f"decision #{i} diverges — {'; '.join(why)}\n"
+                       f"  A: {_fmt(x)}\n  B: {_fmt(y)}")
+    if len(a) != len(b):
+        i = min(len(a), len(b))
+        longer, item = ("A", a[i]) if len(a) > len(b) else ("B", b[i])
+        return i, (f"streams agree for {i} decisions, then {longer} "
+                   f"continues alone:\n  {longer}: {_fmt(item)}")
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("trace_a")
+    ap.add_argument("trace_b")
+    ap.add_argument("--expect-diverge", action="store_true",
+                    help="exit 1 unless a divergence is found")
+    ap.add_argument("--expect-match", action="store_true",
+                    help="exit 1 if any divergence is found")
+    args = ap.parse_args()
+
+    a = decision_stream(load_chrome_trace(args.trace_a))
+    b = decision_stream(load_chrome_trace(args.trace_b))
+    print(f"A: {len(a)} decision/page events ({args.trace_a})")
+    print(f"B: {len(b)} decision/page events ({args.trace_b})")
+
+    found = diff_decisions(a, b)
+    if found is None:
+        print("decision streams are identical")
+        return 1 if args.expect_diverge else 0
+    _, explanation = found
+    print(explanation)
+    return 1 if args.expect_match else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Terminal summary of a PUL Chrome/Perfetto trace.
+
+  PYTHONPATH=src python tools/trace_view.py trace.json [--validate] [--limit N]
+
+Prints, per track: span counts and total/self durations, counter ranges,
+decision tallies, and a short timeline of the first events — enough to see
+what a serving run did without leaving the terminal (load the same file in
+https://ui.perfetto.dev for the full picture).
+
+``--validate`` schema-checks the file first (the contract Perfetto relies
+on: known phases, finite timestamps, balanced B/E per thread, paired async
+spans) and exits nonzero on any violation — the CI trace-smoke job runs
+this against a freshly produced benchmark trace.
+"""
+import argparse
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.tracer import load_chrome_trace, validate_chrome_trace
+
+
+def _track_names(doc):
+    """(pid, tid) -> track name, from the thread_name metadata."""
+    names = {}
+    for ev in doc.get("traceEvents", ()):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            names[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    return names
+
+
+def summarize(doc, limit: int = 12) -> str:
+    names = _track_names(doc)
+    events = [e for e in doc.get("traceEvents", ()) if e.get("ph") != "M"]
+    lines = [f"{len(events)} events across {len(names)} tracks"]
+
+    # synchronous + complete spans: duration per (track, name)
+    spans = defaultdict(lambda: [0, 0.0])       # (track, name) -> [n, dur]
+    open_b = {}
+    counters = defaultdict(lambda: [float("inf"), float("-inf"), 0])
+    decisions = defaultdict(int)
+    instants = defaultdict(int)
+    async_n = defaultdict(int)
+    for ev in events:
+        track = names.get((ev.get("pid"), ev.get("tid")), "?")
+        key = (track, ev.get("name", ""))
+        ph = ev.get("ph")
+        if ph == "B":
+            open_b.setdefault(key, []).append(ev["ts"])
+        elif ph == "E":
+            # E events may carry an empty name; close the innermost open
+            # span on this track instead
+            cands = [k for k in open_b if k[0] == track and open_b[k]]
+            if key in open_b and open_b[key]:
+                cands = [key]
+            if cands:
+                k = cands[-1]
+                t0 = open_b[k].pop()
+                spans[k][0] += 1
+                spans[k][1] += ev["ts"] - t0
+        elif ph == "X":
+            spans[key][0] += 1
+            spans[key][1] += ev.get("dur", 0.0)
+        elif ph == "C":
+            for v in (ev.get("args") or {}).values():
+                if isinstance(v, (int, float)):
+                    c = counters[key]
+                    c[0] = min(c[0], v)
+                    c[1] = max(c[1], v)
+                    c[2] += 1
+        elif ph == "i":
+            if ev.get("cat") == "decision":
+                args = ev.get("args") or {}
+                reason = args.get("reason", "")
+                label = ev["name"] + (f" [{reason}]" if reason else "")
+                decisions[label] += 1
+            else:
+                instants[key] += 1
+        elif ph in ("b", "e"):
+            async_n[(track, ev.get("cat", "async"))] += 1
+
+    if spans:
+        lines.append("\nspans (track / name: count, total ms):")
+        for (track, name), (n, dur) in sorted(
+                spans.items(), key=lambda kv: -kv[1][1])[:limit]:
+            lines.append(f"  {track:<14} {name:<24} x{n:<6} {dur / 1e3:.3f}")
+    if counters:
+        lines.append("\ncounters (track / name: samples, min..max):")
+        for (track, name), (lo, hi, n) in sorted(counters.items()):
+            lines.append(f"  {track:<14} {name:<24} x{n:<6} {lo:g}..{hi:g}")
+    if decisions:
+        lines.append("\nscheduler decisions:")
+        for label, n in sorted(decisions.items()):
+            lines.append(f"  {label:<40} x{n}")
+    if instants:
+        lines.append("\ninstants (track / name: count):")
+        for (track, name), n in sorted(instants.items())[:limit]:
+            lines.append(f"  {track:<14} {name:<24} x{n}")
+    if async_n:
+        lines.append("\nasync span events (track / cat: begin+end count):")
+        for (track, cat), n in sorted(async_n.items()):
+            lines.append(f"  {track:<14} {cat:<24} x{n}")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the trace; exit 1 on any violation")
+    ap.add_argument("--limit", type=int, default=12,
+                    help="rows per summary table (default 12)")
+    args = ap.parse_args()
+
+    doc = load_chrome_trace(args.trace)
+    if args.validate:
+        errors = validate_chrome_trace(doc)
+        if errors:
+            for e in errors:
+                print(f"SCHEMA: {e}", file=sys.stderr)
+            print(f"{args.trace}: {len(errors)} schema violation(s)",
+                  file=sys.stderr)
+            return 1
+        print(f"{args.trace}: schema ok")
+    print(summarize(doc, limit=args.limit))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
