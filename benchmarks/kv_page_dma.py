@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python benchmarks/kv_page_dma.py [--tier remote_hbm]
       [--pe tpu_v5e_vpu] [--page-tokens 16] [--kv-features 128] [--gqa 4]
+      [--arch qwen3-1.7b [--reduced]]
+
+``--arch`` derives the page geometry (packed KV features/token and the GQA
+group) from a real zoo architecture through the serving KV-store layout —
+the SAME `KVStoreLayout` the paged engine serves with — instead of the raw
+--kv-features/--gqa numbers.
 
 Sweeps the page-restore preload distance on `core.dma`'s KV-page workload
 and reports, per distance: modeled restore throughput, PE utilization, and
@@ -35,6 +41,11 @@ def main():
     ap.add_argument("--page-tokens", type=int, default=16)
     ap.add_argument("--kv-features", type=int, default=128)
     ap.add_argument("--gqa", type=int, default=4)
+    ap.add_argument("--arch", default=None,
+                    help="derive --kv-features/--gqa from a zoo arch's "
+                         "KV-store layout (overrides both flags)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="with --arch: use the reduced config")
     ap.add_argument("--pages-per-step", type=int, default=4)
     ap.add_argument("--steps", type=int, default=256)
     ap.add_argument("--trace", metavar="PATH", default=None,
@@ -47,11 +58,23 @@ def main():
     args = ap.parse_args()
 
     tier, pe = TIERS[args.tier], PES[args.pe]
-    P, F = args.page_tokens, args.kv_features
+    P, F, gqa = args.page_tokens, args.kv_features, args.gqa
+    if args.arch:
+        # real page geometry: ask the serving layout what a page holds
+        from repro.configs import get_config
+        from repro.serving import PackedKVLayout
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        layout = PackedKVLayout(cfg, 1, P)
+        F = max(layout.features, 1)
+        gqa = cfg.num_heads // max(cfg.num_kv_heads, 1)
+        print(f"arch {args.arch}: layout v{layout.layout_version}, "
+              f"{F} packed KV features/token, gqa group {gqa}")
     plan = plan_kv_page_stream(page_tokens=P, kv_features=F, tier=tier,
-                               pe=pe, gqa_group=args.gqa)
+                               pe=pe, gqa_group=gqa)
     wl = KVPageWorkload(page_bytes=P * F * 2,
-                        flops_per_page=4.0 * P * F * args.gqa,
+                        flops_per_page=4.0 * P * F * gqa,
                         pages_per_step=args.pages_per_step, steps=args.steps)
     # precondition: the planner's output must pass static verification
     # (coverage, issue ordering, FIFO discipline) before anything executes
@@ -62,7 +85,7 @@ def main():
           + (f" ({len(report.warnings)} warning(s))" if report.warnings
              else ""))
     print(f"KV pages: {P} tok x {F} feat = {wl.page_bytes} B;"
-          f" tier={tier.name} pe={pe.name} gqa={args.gqa}")
+          f" tier={tier.name} pe={pe.name} gqa={gqa}")
     print(f"planner: d*={plan.cfg.distance} ({plan.bound}-bound, predicted "
           f"{plan.predicted_utilization:.0%} PE utilization)\n")
     print(f"{'d':>4} {'time(us)':>10} {'GB/s':>8} {'PE util':>8} "

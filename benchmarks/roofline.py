@@ -20,8 +20,28 @@ Terms (seconds, per the assignment's formulas — numbers are global/chips):
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--dryrun-dir results/dryrun]
 Writes results/roofline.csv and prints the markdown table for EXPERIMENTS.md.
+
+Serving mode (``--serving``) turns the same roofline constants on the paged
+serving engine instead of the dry-run artifacts: it runs a small
+deterministic workload (with one preempt/resume, so the cold tier actually
+moves bytes) through the fused-sweep paged decode path, computes each KV
+tier's achieved-vs-peak bandwidth fraction from the pool's tick-exact byte
+counters (``repro.obs.serving_roofline`` — modeled, NOT wall time), merges
+the report into ``BENCH_serving.json``, and gates the fractions against
+``benchmarks/baselines/roofline_serving.json`` the same way serving_slo.py
+gates TTFT. Exits non-zero on a gate failure so CI can enforce it.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+# pin CPU-backend threading before jax loads (serving mode only needs it,
+# but env must be set before any repro import pulls jax in)
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+if "--xla_cpu_multi_thread_eigen" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_multi_thread_eigen=false").strip()
 
 import argparse
 import csv
@@ -100,6 +120,155 @@ def analyze(dryrun_dir: str):
     return rows
 
 
+# ---------------------------------------------------------------------- #
+# serving mode: achieved-vs-peak bandwidth per KV tier
+# ---------------------------------------------------------------------- #
+# which peak each pool tier rooflines against: the hot tier is device HBM,
+# the cold (spill) tier crosses the interconnect
+SERVING_TIER_BW = {"hot": HBM_BW, "cold": LINK_BW}
+
+# metrics a baselines/roofline_serving.json entry may gate, by key
+_SERVING_METRICS = {
+    "hot_bw_fraction": lambda r: r["tiers"]["hot"]["bw_fraction"],
+    "cold_bw_fraction": lambda r: r["tiers"]["cold"]["bw_fraction"],
+    "hot_bytes_per_token": lambda r: r["tiers"]["hot"]["bytes_per_token"],
+    "cold_bytes_per_token": lambda r: r["tiers"]["cold"]["bytes_per_token"],
+}
+
+
+def run_serving(arch: str, steps: int = 160, use_kernel: bool = True):
+    """Run the deterministic serving workload; return the roofline report.
+
+    Mirrors examples/serve_lm.py's shape: 6 requests over 3 slots with a
+    shared-prefix pair, warm-up decode, then one preempt/resume so
+    evictions + restores (the cold tier's traffic) appear in the counters.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.models import build_model
+    from repro.obs import serving_roofline
+    from repro.serving import PagedServingEngine, Request, ServingConfig
+
+    cfg = get_config(arch).reduced()
+    model = build_model(dataclasses.replace(cfg, paged_kv=True))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = PagedServingEngine(cfg, params, ServingConfig(
+        batch_slots=3, max_seq=96, page_tokens=8,
+        prefill_buckets=(8, 16, 32), use_paged_kernel=use_kernel))
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, size=8).tolist()
+    for i in range(6):
+        if i < 2:
+            prompt = shared + rng.integers(
+                1, cfg.vocab_size, size=rng.integers(1, 6)).tolist()
+        else:
+            prompt = rng.integers(1, cfg.vocab_size,
+                                  size=rng.integers(3, 12)).tolist()
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=10))
+    for _ in range(4):
+        eng.step()
+    victim = next((i for i, r in enumerate(eng.slot_req) if r is not None),
+                  None)
+    if victim is not None:
+        eng.preempt(victim)
+        eng.step()
+        eng.resume(victim)
+    out = eng.run(max_ticks=steps)
+    assert all(len(v) == 10 for v in out.values()), \
+        "serving workload did not finish every request"
+    assert eng.pool.metrics.evictions >= 1 and \
+        eng.pool.metrics.page_faults >= 1, \
+        "preempt/resume moved no bytes through the cold tier"
+
+    n_params = int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+    roof = serving_roofline(econ=eng.economics(), n_params=n_params,
+                            tokens_emitted=eng.metrics.tokens_emitted,
+                            peak_flops=PEAK_BF16, hot_bw=HBM_BW,
+                            cold_bw=LINK_BW)
+    roof["arch"] = arch
+    roof["steps"] = steps
+    roof["paged_kernel"] = use_kernel
+    roof["sweep_decode"] = bool(use_kernel and eng.cfg.sweep_decode)
+    return roof
+
+
+def evaluate_serving_gate(roof, baseline_path):
+    """Gate serving roofline metrics against checked-in baselines.
+
+    Every metric here is counter-derived and deterministic, so the gate is
+    a two-sided band: measured must sit within [baseline / threshold,
+    baseline * threshold]. Above-band = traffic regression (e.g. a copy
+    crept back into the zero-copy path, or the fused commit double-writes);
+    below-band = the byte accounting itself broke.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    checks = []
+    for metric, spec in sorted(base.items()):
+        if metric.startswith("_"):      # _comment etc.
+            continue
+        measured = _SERVING_METRICS[metric](roof)
+        lo = spec["baseline"] / spec["threshold"]
+        hi = spec["baseline"] * spec["threshold"]
+        checks.append({
+            "metric": metric,
+            "measured": measured,
+            "baseline": spec["baseline"],
+            "threshold": spec["threshold"],
+            "pass": lo <= measured <= hi,
+        })
+    return {
+        "baseline": baseline_path,
+        "checks": checks,
+        "pass": all(c["pass"] for c in checks),
+    }
+
+
+def _merge_serving_report(out_path, roof, gate):
+    """Merge roofline + gate into BENCH_serving.json, preserving whatever
+    serving_slo.py already wrote there."""
+    report = {"benchmark": "serving_roofline"}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            report = json.load(f)
+    report["roofline"] = roof
+    report["roofline_gate"] = gate
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+
+def serving_main(args):
+    roof = run_serving(args.serving_arch, steps=args.serving_steps,
+                       use_kernel=not args.serving_no_kernel)
+    m = roof["modeled"]
+    print(f"serving roofline [{roof['arch']}, "
+          f"{'fused sweep' if roof['sweep_decode'] else 'reference path'}]: "
+          f"{roof['tokens_emitted']} tokens, critical path "
+          f"{m['critical_path_s'] * 1e6:.1f}us ({m['dominant']}-bound)")
+    for tier, t in roof["tiers"].items():
+        print(f"  {tier:>4}: {t['bytes_moved']:>9} B moved "
+              f"({t['bytes_per_token']:.0f} B/tok), achieved "
+              f"{t['achieved_bw'] / 1e9:.2f} GB/s of "
+              f"{t['peak_bw'] / 1e9:.0f} GB/s peak "
+              f"= {t['bw_fraction']:.2%}")
+    gate = evaluate_serving_gate(roof, args.serving_baseline)
+    _merge_serving_report(args.out, roof, gate)
+    print(f"wrote {args.out}")
+    for c in gate["checks"]:
+        status = "PASS" if c["pass"] else "FAIL"
+        print(f"   gate {c['metric']}: {c['measured']:.4g} vs baseline "
+              f"{c['baseline']:.4g} (band {c['threshold']}x) [{status}]")
+    if not gate["pass"]:
+        print("serving roofline gate: FAIL")
+        return 1
+    print("serving roofline gate: PASS")
+    return 0
+
+
 FIX_HINTS = {
     "compute": "raise useful_ratio: drop MoE einsum dispatch / lighter remat",
     "memory": "cut optimizer+activation traffic: larger microbatch, fp8/int8 "
@@ -131,7 +300,22 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--csv", default="results/roofline.csv")
+    ap.add_argument("--serving", action="store_true",
+                    help="roofline the paged serving engine's KV tiers "
+                         "instead of the dry-run artifacts; gates vs "
+                         "--serving-baseline and merges into --out")
+    ap.add_argument("--serving-arch", default="qwen3-1.7b")
+    ap.add_argument("--serving-steps", type=int, default=160)
+    ap.add_argument("--serving-no-kernel", action="store_true",
+                    help="measure the reference (non-fused) paged path")
+    ap.add_argument("--serving-baseline",
+                    default="benchmarks/baselines/roofline_serving.json")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="serving mode: BENCH JSON to merge the roofline "
+                         "report into")
     args = ap.parse_args(argv)
+    if args.serving:
+        sys.exit(serving_main(args))
     rows = analyze(args.dryrun_dir)
     ok = [r for r in rows if r["status"] == "ok"]
     Path(args.csv).parent.mkdir(parents=True, exist_ok=True)

@@ -29,6 +29,7 @@ Contract (hard-asserted):
 import os
 import sys
 sys.path.insert(0, "src")
+sys.path.insert(0, ".")     # for benchmarks.roofline (run from repo root)
 
 # pin CPU-backend threading before jax loads (same rationale as
 # tests/conftest.py: keep token streams and tick counts deterministic)
@@ -45,9 +46,10 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_BF16
 from repro.configs import get_config
 from repro.models import build_model
-from repro.obs import Tracer, validate_chrome_trace
+from repro.obs import Tracer, serving_roofline, validate_chrome_trace
 from repro.serving import (
     POLICIES,
     PagedEngineConfig,
@@ -77,7 +79,7 @@ def _prompts(vocab):
     return longs, shorts
 
 
-def run_policy(cfg, params, policy, steps, trace_path=None):
+def run_policy(cfg, params, policy, steps, trace_path=None, n_params=0):
     w = WORKLOAD
     tracer = Tracer() if trace_path else None
     eng = PagedServingEngine(cfg, params, PagedEngineConfig(
@@ -139,6 +141,13 @@ def run_policy(cfg, params, policy, steps, trace_path=None):
                               if t > WORKLOAD["ttft_deadline"]),
         },
         "cache_economics": eng.economics(),
+        # achieved-vs-peak bandwidth per KV tier over this policy's run —
+        # counter-derived and deterministic (see benchmarks/roofline.py
+        # --serving for the gated variant of the same accounting)
+        "roofline": serving_roofline(
+            econ=eng.economics(), n_params=n_params,
+            tokens_emitted=m.tokens_emitted, peak_flops=PEAK_BF16,
+            hot_bw=HBM_BW, cold_bw=LINK_BW),
     }
 
 
@@ -198,6 +207,7 @@ def main():
     cfg = get_config(args.arch).reduced()
     model = build_model(dataclasses.replace(cfg, paged_kv=True))
     params = model.init(jax.random.PRNGKey(0))
+    n_params = int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
 
     policies = {}
     for policy in POLICIES:
@@ -205,14 +215,15 @@ def main():
         trace = (os.path.join(args.trace_dir, f"trace_{policy}.json")
                  if args.trace_dir else None)
         policies[policy] = run_policy(cfg, params, policy, args.steps,
-                                      trace_path=trace)
+                                      trace_path=trace, n_params=n_params)
         p = policies[policy]
         hot = p["cache_economics"]["tiers"]["hot"]
         print(f"   ticks={p['ticks']} tok/s={p['tokens_per_sec']:.2f} "
               f"preempt={p['preemptions']} "
               f"hp_ttft={p['high_priority']['ttft_ticks']} "
               f"hp_violations={p['high_priority']['violations']} "
-              f"hot_B/tok={hot['bytes_per_token']:.0f}")
+              f"hot_B/tok={hot['bytes_per_token']:.0f} "
+              f"hot_bw={p['roofline']['tiers']['hot']['bw_fraction']:.0%}")
 
     failures = []
     if policies["fcfs"]["high_priority"]["violations"] < 1:

@@ -12,6 +12,7 @@ import sys
 sys.path.insert(0, "src")
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -19,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import PagedEngineConfig, PagedServingEngine, Request
+from repro.serving import PagedServingEngine, Request, ServingConfig
 
 
 def main():
@@ -27,12 +28,16 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=10)
+    ServingConfig.add_flags(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = PagedServingEngine(cfg, params, PagedEngineConfig(
+    # the shared flag surface, with this example's tighter defaults layered
+    # on top (3 slots, small pages, a bucket ladder that starts at one page)
+    eng = PagedServingEngine(cfg, params, dataclasses.replace(
+        ServingConfig.from_flags(args),
         batch_slots=3, max_seq=96, page_tokens=8,
         prefill_buckets=(8, 16, 32)))
     print(f"[serve_lm] paged engine: {eng.layout.features} KV features/token,"

@@ -54,6 +54,14 @@ class PageEvent:
       frames: physical frame per slot for WRITE_ROWS events.
       n_valid: valid row count for WRITE_PAGE events.
       shared_key: prefix-sharing key for ALLOC/REF events, when present.
+      layer: which per-layer KV plane the event's frame identifier lives in
+        (v2 layout: the hot tier is one array PER LAYER, so frame f exists
+        once per plane). ``None`` means the event spans every plane at once
+        — the claim/write covers the whole physical frame. The fused sweep
+        commit emits one WRITE_ROWS per layer with ``layer`` set; the
+        sanitizer keys frame ownership by ``(layer, frame)`` so a same-frame
+        write in a DIFFERENT layer is not a collision while one in the SAME
+        layer still is.
     """
 
     seq: int
@@ -61,6 +69,7 @@ class PageEvent:
     kind: EventKind
     pid: Optional[int] = None
     frame: Optional[int] = None
+    layer: Optional[int] = None
     refcount: Optional[int] = None
     deadline: Optional[float] = None
     cause: Optional[str] = None
@@ -75,6 +84,8 @@ class PageEvent:
             bits.append(f"page={self.pid}")
         if self.frame is not None:
             bits.append(f"frame={self.frame}")
+        if self.layer is not None:
+            bits.append(f"layer={self.layer}")
         if self.refcount is not None:
             bits.append(f"refcount={self.refcount}")
         if self.cause is not None:

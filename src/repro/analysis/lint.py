@@ -31,6 +31,18 @@ hazards that are legal Python but wrong (or silently catastrophic) inside
                              crosses scopes belongs on async spans
                              (``async_begin``/``async_end``), which pair by
                              id and are exempt.
+  PUL107 non-donated-update  ``x.at[...].set(...)`` (or ``.add``/... ) where
+                             ``x`` is a parameter of a jitted function that
+                             the jit wrap does NOT donate
+                             (``donate_argnums``/``donate_argnames``). XLA
+                             cannot alias an undonated input, so the update
+                             materializes a full copy of the buffer every
+                             call — the exact hidden cost the zero-copy page
+                             store exists to avoid. Donate the argument (and
+                             stop using the caller's handle afterwards) or
+                             update a value derived inside the function.
+                             Pallas kernel bodies are exempt: Refs mutate in
+                             place by construction.
 
 Traced-vs-host classification is annotation-driven, not heuristic: a
 parameter annotated ``jax.Array`` / ``jnp.ndarray`` is traced; any other
@@ -61,6 +73,7 @@ RULES: Dict[str, str] = {
     "PUL104": "mutable default argument",
     "PUL105": "swallowed exception",
     "PUL106": "unbalanced tracer span begin/end",
+    "PUL107": "non-donated buffer update in a jitted function",
 }
 
 _WAIVER_RE = re.compile(r"#\s*pul-lint:\s*disable=([A-Za-z0-9,_\s]+|all)")
@@ -83,6 +96,10 @@ _NUMPY_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray",
                      "numpy.array", "onp.asarray", "onp.array"}
 _JIT_WRAPPERS = {"jax.jit", "jit", "jax.pmap", "pmap"}
 _KERNEL_WRAPPERS = {"pl.pallas_call", "pallas_call", "pltpu.pallas_call"}
+# `.at[...]` update methods whose result is a full functional copy of the
+# base buffer unless XLA can alias it (donated input / internal value)
+_AT_UPDATE_METHODS = {"set", "add", "subtract", "multiply", "divide",
+                      "min", "max", "power", "apply"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,15 +201,62 @@ def _expr_is_traced(expr: ast.AST, traced: Set[str], in_jit: bool) -> bool:
     return False
 
 
+def _const_ints(node: Optional[ast.AST]) -> Set[int]:
+    """Integer constants in a literal (or literal tuple/list/set)."""
+    if node is None:
+        return set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: Set[int] = set()
+        for elt in node.elts:
+            out |= _const_ints(elt)
+        return out
+    return set()
+
+
+def _const_strs(node: Optional[ast.AST]) -> Set[str]:
+    if node is None:
+        return set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: Set[str] = set()
+        for elt in node.elts:
+            out |= _const_strs(elt)
+        return out
+    return set()
+
+
+def _donation_kwargs(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    """donate_argnums / donate_argnames literals on a jit(...) call."""
+    argnums: Set[int] = set()
+    argnames: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            argnums |= _const_ints(kw.value)
+        elif kw.arg == "donate_argnames":
+            argnames |= _const_strs(kw.value)
+    return argnums, argnames
+
+
 class _FunctionLinter:
     """Lint one function body (not recursing into nested scopes)."""
 
     def __init__(self, fn, *, path: str, in_jit: bool,
-                 findings: List[Finding]):
+                 findings: List[Finding], donated: Optional[Set[str]] = None,
+                 check_donation: bool = False):
         self.fn = fn
         self.path = path
         self.in_jit = in_jit
         self.findings = findings
+        self.donated = donated or set()
+        self.check_donation = check_donation
+        args = fn.args
+        self.param_names = {
+            a.arg for a in (list(args.posonlyargs) + list(args.args)
+                            + list(args.kwonlyargs))
+            if a.arg not in ("self", "cls")}
         self.traced = self._initial_traced(fn)
 
     # -------------------------------------------------------------- #
@@ -296,6 +360,8 @@ class _FunctionLinter:
             self._check_blockspec(call)
         if not self.in_jit:
             return
+        if self.check_donation:
+            self._check_at_update(call)
         # PUL102: host syncs on traced values
         if (isinstance(call.func, ast.Attribute)
                 and call.func.attr in _HOST_SYNC_METHODS
@@ -314,6 +380,30 @@ class _FunctionLinter:
             self._flag("PUL102", call,
                        f"{name}() on a traced value pulls it to host "
                        "memory inside the jitted hot path")
+
+    def _check_at_update(self, call: ast.Call) -> None:
+        """PUL107: `x.at[...].set(...)` where `x` is a non-donated param of
+        this jitted function. The functional update can only alias (update
+        in place) when XLA owns the input buffer — i.e. the jit wrap
+        donates it; otherwise every call pays a full copy of `x`."""
+        if not (isinstance(call.func, ast.Attribute)
+                and call.func.attr in _AT_UPDATE_METHODS):
+            return
+        sub = call.func.value
+        if not (isinstance(sub, ast.Subscript)
+                and isinstance(sub.value, ast.Attribute)
+                and sub.value.attr == "at"
+                and isinstance(sub.value.value, ast.Name)):
+            return                      # only bare-name bases: `x.at[i].set`
+        base = sub.value.value.id
+        if base in self.param_names and base not in self.donated:
+            self._flag("PUL107", call,
+                       f"`{base}.at[...].{call.func.attr}(...)` updates a "
+                       f"jit parameter that is not donated: XLA cannot "
+                       "alias the input, so every call copies the whole "
+                       "buffer. Donate it (donate_argnums/donate_argnames "
+                       "at the jit site) or build the updated value inside "
+                       "the function")
 
     def _check_blockspec(self, call: ast.Call) -> None:
         shape = None
@@ -340,23 +430,34 @@ class _ModuleLinter(ast.NodeVisitor):
         self.tree = tree
         self.path = path
         self.findings: List[Finding] = []
+        # fn name -> (donated argnums, donated argnames) across every jit
+        # wrap site that names it (union: donated anywhere counts)
+        self.jit_donations: Dict[str, Tuple[Set[int], Set[str]]] = {}
         self.jit_names = self._collect_jit_names(tree)
 
     # -------------------------------------------------------------- #
     def _collect_jit_names(self, tree: ast.Module) -> Set[str]:
         """Names of functions that end up inside jit/pallas_call wrappers,
-        resolving one level of `x = functools.partial(f, ...)` aliasing."""
-        alias: Dict[str, str] = {}
+        resolving one level of `x = functools.partial(f, ...)` aliasing,
+        and recording each jit site's donate_argnums/donate_argnames
+        (argnums shifted past a partial's bound positional args)."""
+        alias: Dict[str, Tuple[str, int]] = {}   # name -> (inner, n_bound)
+
+        def _resolve_partial(call: ast.Call) -> Optional[Tuple[str, int]]:
+            fname = _dotted(call.func)
+            if fname in ("functools.partial", "partial") and call.args:
+                inner = _dotted(call.args[0])
+                if inner:
+                    return inner, len(call.args) - 1
+            return None
+
         for node in ast.walk(tree):
             if (isinstance(node, ast.Assign) and len(node.targets) == 1
                     and isinstance(node.targets[0], ast.Name)
                     and isinstance(node.value, ast.Call)):
-                fname = _dotted(node.value.func)
-                if fname in ("functools.partial", "partial") \
-                        and node.value.args:
-                    inner = _dotted(node.value.args[0])
-                    if inner:
-                        alias[node.targets[0].id] = inner
+                resolved = _resolve_partial(node.value)
+                if resolved:
+                    alias[node.targets[0].id] = resolved
         jit: Set[str] = set()
         for node in ast.walk(tree):
             if not isinstance(node, ast.Call):
@@ -365,9 +466,23 @@ class _ModuleLinter(ast.NodeVisitor):
             if fname not in _JIT_WRAPPERS | _KERNEL_WRAPPERS:
                 continue
             for arg in node.args[:1]:
-                target = _dotted(arg)
-                if target is not None:
-                    jit.add(alias.get(target, target))
+                target, shift = _dotted(arg), 0
+                if target is None and isinstance(arg, ast.Call):
+                    # jax.jit(functools.partial(f, ...), ...) inline
+                    resolved = _resolve_partial(arg)
+                    if resolved:
+                        target, shift = resolved
+                elif target is not None and target in alias:
+                    target, shift = alias[target]
+                if target is None:
+                    continue
+                jit.add(target)
+                if fname in _JIT_WRAPPERS:
+                    nums, names = _donation_kwargs(node)
+                    have = self.jit_donations.setdefault(
+                        target, (set(), set()))
+                    have[0].update(n + shift for n in nums)
+                    have[1].update(names)
         return jit
 
     def _is_jit_context(self, fn) -> bool:
@@ -386,6 +501,33 @@ class _ModuleLinter(ast.NodeVisitor):
             return True
         # repo convention: Pallas kernel bodies are named *_kernel
         return fn.name == "kernel" or fn.name.endswith("_kernel")
+
+    def _is_pallas_kernel(self, fn) -> bool:
+        return fn.name == "kernel" or fn.name.endswith("_kernel")
+
+    def _donated_params(self, fn) -> Set[str]:
+        """Parameter NAMES the jit wrap donates, from call-site records
+        plus decorator forms (@jax.jit(donate_argnums=...) and
+        @functools.partial(jax.jit, donate_argnums=...))."""
+        nums: Set[int] = set()
+        names: Set[str] = set()
+        rec = self.jit_donations.get(fn.name)
+        if rec:
+            nums |= rec[0]
+            names |= rec[1]
+        for deco in fn.decorator_list:
+            if not isinstance(deco, ast.Call):
+                continue
+            head = _dotted(deco.func)
+            if head in _JIT_WRAPPERS or (
+                    head in ("functools.partial", "partial") and deco.args
+                    and _dotted(deco.args[0]) in _JIT_WRAPPERS):
+                n, s = _donation_kwargs(deco)
+                nums |= n
+                names |= s
+        positional = [a.arg for a in (list(fn.args.posonlyargs)
+                                      + list(fn.args.args))]
+        return names | {positional[i] for i in nums if i < len(positional)}
 
     # -------------------------------------------------------------- #
     def run(self) -> List[Finding]:
@@ -409,9 +551,14 @@ class _ModuleLinter(ast.NodeVisitor):
         return self.findings
 
     def _lint_function(self, fn) -> None:
-        _FunctionLinter(fn, path=self.path,
-                        in_jit=self._is_jit_context(fn),
-                        findings=self.findings).run()
+        in_jit = self._is_jit_context(fn)
+        _FunctionLinter(fn, path=self.path, in_jit=in_jit,
+                        findings=self.findings,
+                        donated=self._donated_params(fn) if in_jit else None,
+                        # Pallas Refs mutate in place by construction; the
+                        # donation question only exists at jit boundaries
+                        check_donation=not self._is_pallas_kernel(fn),
+                        ).run()
 
     # -------------------------------------------------------------- #
     def _check_mutable_defaults(self, fn) -> None:

@@ -100,6 +100,7 @@ class _PageState:
     frame: Optional[int]
     refcount: int
     last_used: int
+    layer: Optional[int] = None     # plane scope of the frame claim
     deadline: float = math.inf
     last_evict_clock: int = -1
     last_restore_clock: int = -1
@@ -107,11 +108,22 @@ class _PageState:
 
 
 class LifecycleChecker:
-    """Stateful replay of a page-event trace; collects violations."""
+    """Stateful replay of a page-event trace; collects violations.
+
+    Frame identifiers are scoped ``(layer, frame)``: the v2 per-layer page
+    store holds one hot array PER LAYER, so the same frame number names a
+    distinct row range in every plane. An event with ``layer=None`` claims
+    or writes the WHOLE physical frame (every plane at once) — the pool's
+    allocator works at that granularity — while per-layer events (the fused
+    sweep commit's WRITE_ROWS) touch exactly one plane. Two pages may
+    therefore coexist on one frame number in *different* layers without a
+    collision, but a same-layer overlap (or any overlap with a whole-frame
+    claim) is still flagged."""
 
     def __init__(self) -> None:
         self.pages: Dict[int, _PageState] = {}
-        self.frame_owner: Dict[int, int] = {}   # hot frame -> pid
+        # hot frame -> {layer or None (whole frame): pid}
+        self.frame_owner: Dict[int, Dict[Optional[int], int]] = {}
         self.violations: List[Violation] = []
         self._consumed = 0
 
@@ -129,22 +141,51 @@ class LifecycleChecker:
     def _page(self, ev: PageEvent) -> Optional[_PageState]:
         return self.pages.get(ev.pid) if ev.pid is not None else None
 
+    def _owner_of(self, layer: Optional[int],
+                  frame: int) -> Optional[int]:
+        """Resolve the pid owning ``(layer, frame)``: a layer-scoped claim
+        wins, falling back to the whole-frame (layer=None) owner."""
+        owners = self.frame_owner.get(frame, {})
+        if layer is not None and layer in owners:
+            return owners[layer]
+        return owners.get(None)
+
     def _claim_frame(self, ev: PageEvent, pid: int,
                      frame: Optional[int]) -> None:
         if frame is None:
             return
+        layer = ev.layer
+        owners = self.frame_owner.setdefault(frame, {})
         if frame < RESERVED_FRAMES:
             self._flag("frame-collision", ev,
                        f"page {pid} placed into reserved frame {frame}")
-        elif frame in self.frame_owner and self.frame_owner[frame] != pid:
-            self._flag("frame-collision", ev,
-                       f"frame {frame} already backs hot page "
-                       f"{self.frame_owner[frame]}")
-        self.frame_owner[frame] = pid
+        else:
+            # whole-frame claims conflict with every plane; a layer-scoped
+            # claim only with its own plane or a whole-frame owner
+            rivals = (owners.values() if layer is None else
+                      [o for l, o in owners.items()
+                       if l is None or l == layer])
+            rival = next((o for o in rivals if o != pid), None)
+            if rival is not None:
+                scope = "" if layer is None else f" (layer {layer})"
+                self._flag("frame-collision", ev,
+                           f"frame {frame}{scope} already backs hot page "
+                           f"{rival}")
+        owners[layer] = pid
 
-    def _release_frame(self, pid: int, frame: Optional[int]) -> None:
-        if frame is not None and self.frame_owner.get(frame) == pid:
-            del self.frame_owner[frame]
+    def _release_frame(self, pid: int, frame: Optional[int],
+                       layer: Optional[int] = None) -> None:
+        owners = self.frame_owner.get(frame)
+        if owners is None:
+            return
+        if layer is None:
+            # whole-frame release drops every claim this pid holds here
+            for l in [l for l, o in owners.items() if o == pid]:
+                del owners[l]
+        elif owners.get(layer) == pid:
+            del owners[layer]
+        if not owners:
+            self.frame_owner.pop(frame, None)
 
     # ------------------------------------------------------------------ #
     def feed(self, events: Iterable[PageEvent]) -> List[Violation]:
@@ -177,7 +218,7 @@ class LifecycleChecker:
             self.pages[ev.pid] = ps = _PageState(
                 state=_HOT, frame=ev.frame,
                 refcount=ev.refcount if ev.refcount is not None else 1,
-                last_used=ev.clock)
+                last_used=ev.clock, layer=ev.layer)
             self._claim_frame(ev, ev.pid, ev.frame)
             ps.history.append(ev)
             return
@@ -231,7 +272,7 @@ class LifecycleChecker:
             self._flag("refcount-underflow", ev,
                        f"page {ev.pid} freed with refcount {ps.refcount} "
                        "still outstanding")
-        self._release_frame(ev.pid, ps.frame)
+        self._release_frame(ev.pid, ps.frame, ps.layer)
         ps.state = _FREED
         ps.frame = None
 
@@ -247,7 +288,7 @@ class LifecycleChecker:
                        f"page {ev.pid} restored and evicted within clock "
                        f"step {ev.clock} (same-step churn)")
         ps.last_evict_clock = ev.clock
-        self._release_frame(ev.pid, ps.frame)
+        self._release_frame(ev.pid, ps.frame, ps.layer)
         ps.state = _COLD
         ps.frame = None
 
@@ -264,6 +305,7 @@ class LifecycleChecker:
         ps.last_restore_clock = ev.clock
         ps.state = _HOT
         ps.frame = ev.frame
+        ps.layer = ev.layer
         self._claim_frame(ev, ev.pid, ev.frame)
 
     def _on_touch(self, ev: PageEvent, ps: _PageState) -> None:
@@ -304,6 +346,7 @@ class LifecycleChecker:
                 return
 
     def _check_write_rows(self, ev: PageEvent) -> None:
+        where = "" if ev.layer is None else f" (layer {ev.layer})"
         for slot, frame in enumerate(ev.frames):
             if frame == TRASH_FRAME:
                 continue                    # designated write sink: fine
@@ -312,11 +355,11 @@ class LifecycleChecker:
                            f"slot {slot} scattered a row into the reserved "
                            "zero frame (unallocated page-table slots must "
                            "stay all-zeros)",
-                           pid=self.frame_owner.get(frame))
-            elif frame not in self.frame_owner:
+                           pid=self._owner_of(ev.layer, frame))
+            elif self._owner_of(ev.layer, frame) is None:
                 self._flag("write-to-non-hot-frame", ev,
-                           f"slot {slot} scattered a row into frame {frame} "
-                           "which backs no hot page")
+                           f"slot {slot} scattered a row into frame "
+                           f"{frame}{where} which backs no hot page")
 
     # ------------------------------------------------------------------ #
     def finalize(self) -> List[Violation]:

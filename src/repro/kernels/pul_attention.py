@@ -317,6 +317,306 @@ def pul_paged_mla_decode_attention(q_abs: jax.Array, q_rope: jax.Array,
       ckv_pages, kr_pages)
 
 
+def _paged_sweep_decode_kernel(pt_smem, len_smem, frames_smem, offs_smem,
+                               layer_smem, q_vmem, knew_vmem, vnew_vmem,
+                               k_hbm, v_hbm, o_vmem, kp_out, vp_out,
+                               kbuf, ksems, vbuf, vsems, wsem, *,
+                               cfg: PULConfig, P: int, n_pages: int,
+                               scale: float, softcap: Optional[float],
+                               window: Optional[int]):
+    b = pl.program_id(0)
+    kv_h = pl.program_id(1)
+    g = layer_smem[0]
+    length = len_smem[b]
+
+    # same page-table-driven stream as the per-layer kernel, with the layer
+    # scalar prepended: block t is plane row (g, pt[b, t], kv_h) — the sweep
+    # reads the SAME bytes the per-layer launch would, just without the
+    # host-side layer slice
+    k_st = PreloadStream(k_hbm, kbuf, ksems,
+                         index_map=lambda t: (g, pt_smem[b, t], kv_h, 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+    v_st = PreloadStream(v_hbm, vbuf, vsems,
+                         index_map=lambda t: (g, pt_smem[b, t], kv_h, 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+
+    q = q_vmem[0, 0].astype(jnp.float32)                 # (G, hd)
+
+    def _cap(logits):
+        if softcap is not None:
+            return softcap * jnp.tanh(logits / softcap)
+        return logits
+
+    def body(t, views, carry):
+        m, l, acc = carry
+        kt = views[0][0, 0, 0].astype(jnp.float32)       # (P, hd)
+        vt = views[1][0, 0, 0].astype(jnp.float32)
+        logits = _cap(
+            jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale)
+        jk = t * P + jax.lax.iota(jnp.int32, P)
+        msk = jk < length
+        if window is not None:
+            msk &= jk > length - window
+        logits = jnp.where(msk[None, :], logits, NEG_INF)
+        bmax = jnp.max(logits, axis=-1, keepdims=True)
+        new_m = jnp.maximum(m, bmax)
+        corr = jnp.exp(m - new_m)
+        p = jnp.exp(logits - new_m)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.dot(p, vt, preferred_element_type=jnp.float32)
+        return new_m, l, acc
+
+    G, hd = q.shape
+    init = (jnp.full((G, 1), NEG_INF, jnp.float32),
+            jnp.zeros((G, 1), jnp.float32),
+            jnp.zeros((G, hd), jnp.float32))
+    m, l, acc = pul_loop(n_pages, [k_st, v_st], body, init, cfg)
+    # the current token (position `length`, not yet paged) is always
+    # causally visible and always inside the window
+    kn = knew_vmem[0, 0, 0].astype(jnp.float32)          # (1, hd)
+    vn = vnew_vmem[0, 0, 0].astype(jnp.float32)
+    ls = _cap(jnp.dot(q, kn.T, preferred_element_type=jnp.float32) * scale)
+    new_m = jnp.maximum(m, ls)
+    corr = jnp.exp(m - new_m)
+    p = jnp.exp(ls - new_m)
+    l = l * corr + p
+    acc = acc * corr + jnp.dot(p, vn, preferred_element_type=jnp.float32)
+    o_vmem[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_vmem.dtype)
+
+    # fused commit epilogue: write the current token's K/V row into its tail
+    # page at (layer, frame, kv_h, offset). The attention stream above only
+    # reads positions < length and this row IS position length, so the write
+    # can never race a read of itself; inactive slots' frames point at the
+    # pool's TRASH sink. The host side accounts/validates this commit via
+    # KVPagePool.note_fused_commit BEFORE the launch.
+    f = frames_smem[b]
+    o = offs_smem[b]
+    kdst = kp_out.at[pl.ds(g, 1), pl.ds(f, 1), pl.ds(kv_h, 1),
+                     pl.ds(o, 1), :]
+    vdst = vp_out.at[pl.ds(g, 1), pl.ds(f, 1), pl.ds(kv_h, 1),
+                     pl.ds(o, 1), :]
+    kcp = pltpu.make_async_copy(knew_vmem.at[...], kdst, wsem)
+    kcp.start()
+    kcp.wait()
+    vcp = pltpu.make_async_copy(vnew_vmem.at[...], vdst, wsem)
+    vcp.start()
+    vcp.wait()
+
+
+def pul_paged_sweep_decode_attention(
+        q: jax.Array, k_planes: jax.Array, v_planes: jax.Array, layer,
+        page_tables: jax.Array, lengths, k_new: jax.Array, v_new: jax.Array,
+        frames, offsets, *, cfg: PULConfig = PULConfig(),
+        scale: Optional[float] = None, softcap: Optional[float] = None,
+        window: Optional[int] = None, interpret: bool = True):
+    """One layer step of the single-sweep paged decode over per-layer planes.
+
+    Reads layer `layer` of the full stacked planes and fuses the commit of
+    the current token's K/V into the kernel epilogue — the in-kernel half of
+    the `KVStoreLayout` commit contract.
+
+    q: (B, H, hd); k_planes/v_planes: (L, NF, K, P, hd) the ENTIRE per-layer
+    page store (never sliced on the host — the zero-copy point); layer: ()
+    int32 scalar (prefetched to SMEM; a scan-carried layer index); k_new /
+    v_new: (B, K, hd) the current token's K/V, merged into the online
+    softmax AND written to plane position (layer, frames[b], kv_h,
+    offsets[b]); frames/offsets: (B,) int32 tail-page frame and in-page row
+    per slot (TRASH frame for inactive slots — never the zero frame).
+
+    Returns (out (B, H, hd), k_planes, v_planes) where the plane outputs are
+    input/output-aliased: XLA updates the store in place, the caller threads
+    them forward (the engine donates them through the jitted step).
+    """
+    B, H, hd = q.shape
+    L, NF, K, P, _ = k_planes.shape
+    _, n_pages = page_tables.shape
+    assert H % K == 0
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+    layer = jnp.asarray(layer, jnp.int32).reshape(1)
+    frames = jnp.asarray(frames, jnp.int32).reshape(B)
+    offsets = jnp.asarray(offsets, jnp.int32).reshape(B)
+    qg = q.reshape(B, K, G, hd)
+    kern = functools.partial(_paged_sweep_decode_kernel, cfg=cfg, P=P,
+                             n_pages=n_pages, scale=scale, softcap=softcap,
+                             window=window)
+    out, kp, vp = pl.pallas_call(
+        kern,
+        grid=(B, K),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+            jax.ShapeDtypeStruct(k_planes.shape, k_planes.dtype),
+            jax.ShapeDtypeStruct(v_planes.shape, v_planes.dtype),
+        ],
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # page tables
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # lengths
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # commit frames
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # commit offsets
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # layer scalar
+            pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            # new-token rows, rank-matched to the plane for the epilogue DMA
+            pl.BlockSpec((1, 1, 1, 1, hd), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, hd), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        # flattened inputs: pt, len, frames, offs, layer, q, k_new, v_new,
+        # k_planes (8), v_planes (9) -> aliased to outputs 1 and 2
+        input_output_aliases={8: 1, 9: 2},
+        scratch_shapes=[
+            *ring_scratch(cfg, (1, 1, 1, P, hd), k_planes.dtype),
+            *ring_scratch(cfg, (1, 1, 1, P, hd), v_planes.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(page_tables.astype(jnp.int32), lengths, frames, offsets, layer, qg,
+      k_new.astype(k_planes.dtype).reshape(B, K, 1, 1, hd),
+      v_new.astype(v_planes.dtype).reshape(B, K, 1, 1, hd),
+      k_planes, v_planes)
+    return out.reshape(B, H, hd), kp, vp
+
+
+def _paged_sweep_mla_decode_kernel(pt_smem, len_smem, frames_smem, offs_smem,
+                                   layer_smem, qa_vmem, qr_vmem, cnew_vmem,
+                                   rnew_vmem, ckv_hbm, kr_hbm, o_vmem,
+                                   cp_out, rp_out, cbuf, csems, rbuf, rsems,
+                                   wsem, *, cfg: PULConfig, P: int,
+                                   n_pages: int, scale: float):
+    b = pl.program_id(0)
+    g = layer_smem[0]
+    length = len_smem[b]
+
+    c_st = PreloadStream(ckv_hbm, cbuf, csems,
+                         index_map=lambda t: (g, pt_smem[b, t], 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+    r_st = PreloadStream(kr_hbm, rbuf, rsems,
+                         index_map=lambda t: (g, pt_smem[b, t], 0, 0),
+                         cfg=cfg, n_blocks=n_pages)
+
+    qa = qa_vmem[0].astype(jnp.float32)                  # (H, kvr)
+    qr = qr_vmem[0].astype(jnp.float32)                  # (H, dr)
+
+    def body(t, views, carry):
+        m, l, acc = carry
+        ct = views[0][0, 0].astype(jnp.float32)          # (P, kvr)
+        rt = views[1][0, 0].astype(jnp.float32)          # (P, dr)
+        logits = (jnp.dot(qa, ct.T, preferred_element_type=jnp.float32)
+                  + jnp.dot(qr, rt.T, preferred_element_type=jnp.float32)
+                  ) * scale
+        jk = t * P + jax.lax.iota(jnp.int32, P)
+        logits = jnp.where((jk < length)[None, :], logits, NEG_INF)
+        bmax = jnp.max(logits, axis=-1, keepdims=True)
+        new_m = jnp.maximum(m, bmax)
+        corr = jnp.exp(m - new_m)
+        p = jnp.exp(logits - new_m)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.dot(p, ct, preferred_element_type=jnp.float32)
+        return new_m, l, acc
+
+    H, kvr = qa.shape
+    init = (jnp.full((H, 1), NEG_INF, jnp.float32),
+            jnp.zeros((H, 1), jnp.float32),
+            jnp.zeros((H, kvr), jnp.float32))
+    m, l, acc = pul_loop(n_pages, [c_st, r_st], body, init, cfg)
+    cn = cnew_vmem[0, 0].astype(jnp.float32)             # (1, kvr)
+    rn = rnew_vmem[0, 0].astype(jnp.float32)             # (1, dr)
+    ls = (jnp.dot(qa, cn.T, preferred_element_type=jnp.float32)
+          + jnp.dot(qr, rn.T, preferred_element_type=jnp.float32)) * scale
+    new_m = jnp.maximum(m, ls)
+    corr = jnp.exp(m - new_m)
+    p = jnp.exp(ls - new_m)
+    l = l * corr + p
+    acc = acc * corr + jnp.dot(p, cn, preferred_element_type=jnp.float32)
+    o_vmem[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_vmem.dtype)
+
+    # fused commit epilogue (see _paged_sweep_decode_kernel): the current
+    # token's compressed KV lands at (layer, frame, offset) of both planes
+    f = frames_smem[b]
+    o = offs_smem[b]
+    cdst = cp_out.at[pl.ds(g, 1), pl.ds(f, 1), pl.ds(o, 1), :]
+    rdst = rp_out.at[pl.ds(g, 1), pl.ds(f, 1), pl.ds(o, 1), :]
+    ccp = pltpu.make_async_copy(cnew_vmem.at[...], cdst, wsem)
+    ccp.start()
+    ccp.wait()
+    rcp = pltpu.make_async_copy(rnew_vmem.at[...], rdst, wsem)
+    rcp.start()
+    rcp.wait()
+
+
+def pul_paged_sweep_mla_decode_attention(
+        q_abs: jax.Array, q_rope: jax.Array, ckv_planes: jax.Array,
+        kr_planes: jax.Array, layer, page_tables: jax.Array, lengths,
+        c_new: jax.Array, r_new: jax.Array, frames, offsets, *, scale: float,
+        cfg: PULConfig = PULConfig(), interpret: bool = True):
+    """Absorbed-MLA layer step of the single-sweep paged decode.
+
+    ckv_planes: (L, NF, P, kvr), kr_planes: (L, NF, P, dr) — the entire
+    per-layer compressed page store; `layer` selects the plane row in-kernel
+    via the prefetched SMEM scalar. c_new/r_new ((B, kvr)/(B, dr)) are merged
+    into the online softmax AND committed to (layer, frames[b], offsets[b])
+    in the fused epilogue. Returns (o_c (B, H, kvr), ckv_planes, kr_planes)
+    with the planes input/output-aliased for in-place update.
+    """
+    B, H, kvr = q_abs.shape
+    L, NF, P, _ = ckv_planes.shape
+    dr = q_rope.shape[-1]
+    _, n_pages = page_tables.shape
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+    layer = jnp.asarray(layer, jnp.int32).reshape(1)
+    frames = jnp.asarray(frames, jnp.int32).reshape(B)
+    offsets = jnp.asarray(offsets, jnp.int32).reshape(B)
+    kern = functools.partial(_paged_sweep_mla_decode_kernel, cfg=cfg, P=P,
+                             n_pages=n_pages, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, kvr), q_abs.dtype),
+            jax.ShapeDtypeStruct(ckv_planes.shape, ckv_planes.dtype),
+            jax.ShapeDtypeStruct(kr_planes.shape, kr_planes.dtype),
+        ],
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, kvr), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H, dr), lambda b: (b, 0, 0)),
+            # new-token rows, rank-matched to the planes for the epilogue DMA
+            pl.BlockSpec((1, 1, 1, kvr), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1, 1, dr), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, kvr), lambda b: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        # flattened inputs: pt, len, frames, offs, layer, qa, qr, c_new,
+        # r_new, ckv_planes (9), kr_planes (10) -> aliased to outputs 1, 2
+        input_output_aliases={9: 1, 10: 2},
+        scratch_shapes=[
+            *ring_scratch(cfg, (1, 1, P, kvr), ckv_planes.dtype),
+            *ring_scratch(cfg, (1, 1, P, dr), kr_planes.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(page_tables.astype(jnp.int32), lengths, frames, offsets, layer,
+      q_abs, q_rope,
+      c_new.astype(ckv_planes.dtype).reshape(B, 1, 1, kvr),
+      r_new.astype(kr_planes.dtype).reshape(B, 1, 1, dr),
+      ckv_planes, kr_planes)
+
+
 def pul_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   cfg: PULConfig = PULConfig(), bt: int = 128, bs: int = 128,
                   causal: bool = True, scale: Optional[float] = None,

@@ -26,10 +26,9 @@ from repro.configs import get_config
 from repro.models import zoo
 from repro.obs import Tracer, validate_chrome_trace
 from repro.serving import (
-    EngineConfig,
-    PagedEngineConfig,
     PagedServingEngine,
     Request,
+    ServingConfig,
     ServingEngine,
 )
 
@@ -40,26 +39,9 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--dense", action="store_true",
                     help="use the dense-cache reference engine")
-    ap.add_argument("--page-tokens", type=int, default=16)
-    ap.add_argument("--hot-pages", type=int, default=0)
-    ap.add_argument("--distance", type=int, default=0,
-                    help="page-restore preload distance (0 = planner d*)")
-    ap.add_argument("--max-active-tokens", type=int, default=0)
-    ap.add_argument("--no-prefix-sharing", action="store_true")
-    ap.add_argument("--paged-kernel", action="store_true",
-                    help="kernel-true decode: attention streams straight "
-                         "over page frames (no dense assembly)")
-    ap.add_argument("--policy", default="fcfs",
-                    choices=("fcfs", "priority", "slo-edf"),
-                    help="admission policy; priority and slo-edf preempt "
-                         "running requests (swap-out to the cold tier)")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked prefill: page-aligned tokens per tick for "
-                         "prompts longer than this (0 = monolithic)")
+    ServingConfig.add_flags(ap)
     ap.add_argument("--high-priority-every", type=int, default=0,
                     help="mark every Nth request high-priority with a TTFT "
                          "deadline (0 = uniform workload)")
@@ -85,12 +67,11 @@ def main(argv=None):
     model = zoo.build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    # ONE config for both engines: each projects the facade onto its layer
+    serving_cfg = ServingConfig.from_flags(args)
     if args.dense:
-        eng = ServingEngine(cfg, params, EngineConfig(
-            batch_slots=args.slots, max_seq=args.max_seq,
-            prefill_bucket=min(64, args.max_seq // 2)))
+        eng = ServingEngine(cfg, params, serving_cfg)
     else:
-        buckets = tuple(b for b in (16, 32, 64, 128) if b <= args.max_seq)
         hook = (lambda s: print(
             f"[serve] tick {s['tick']:4d}  {s['tokens_per_sec']:6.1f} tok/s"
             f"  live {s['live_slots']}  queued {s['queued']}"
@@ -98,17 +79,8 @@ def main(argv=None):
             f"  hidden {s['modeled_restore_latency_hidden']:.0%}")
             if s["tick"] % args.log_every == 0 else None)
         tracer = Tracer() if args.trace else None
-        eng = PagedServingEngine(cfg, params, PagedEngineConfig(
-            batch_slots=args.slots, max_seq=args.max_seq,
-            page_tokens=args.page_tokens, hot_pages=args.hot_pages,
-            prefill_buckets=buckets or (args.max_seq,),
-            preload_distance=args.distance or None,
-            max_active_tokens=args.max_active_tokens,
-            share_prefix_pages=not args.no_prefix_sharing,
-            use_paged_kernel=args.paged_kernel,
-            policy=args.policy,
-            prefill_chunk_tokens=args.prefill_chunk),
-            metrics_hook=hook, tracer=tracer)
+        eng = PagedServingEngine(cfg, params, serving_cfg,
+                                 metrics_hook=hook, tracer=tracer)
         print(f"[serve] paged KV: {eng.layout.features} packed features/token"
               f", {args.page_tokens} tokens/page, planned d*="
               f"{eng.pool.distance}")

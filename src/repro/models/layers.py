@@ -22,6 +22,41 @@ from repro.runtime.sharding import constrain as _constrain
 NEG_INF = -2.0e38  # large finite; avoids nan from (-inf) - (-inf)
 
 
+class PagedSweep:
+    """Routing context for the single-sweep paged decode.
+
+    When the engine serves from per-layer page planes (`KVStoreLayout` v2),
+    `paged` carries one of these instead of the legacy (page_table, PULConfig)
+    tuple. The backbone threads the FULL stacked planes through the layer
+    scan's carry and mutates this context as tracing walks the blocks: it
+    sets `prefix` to the current block's cache path and `layer` to the
+    scan-carried group index; each attention block then reads its planes via
+    :meth:`plane`, calls the sweep kernel (which selects the layer in-kernel
+    from an SMEM scalar and commits the current token's rows in its fused
+    epilogue), and writes the aliased plane outputs back via
+    :meth:`set_plane`. `frames`/`offsets` ((B,) int32) name each slot's
+    tail-page commit position (TRASH frame for inactive slots).
+    """
+
+    def __init__(self, page_table, pul_cfg, frames, offsets, planes):
+        self.page_table = page_table
+        self.pul_cfg = pul_cfg
+        self.frames = frames
+        self.offsets = offsets
+        self.planes = planes        # {plane_key: (L, NF, ...) full plane}
+        self.prefix: Tuple[str, ...] = ()
+        self.layer = 0              # traced group index inside the scan
+
+    def _key(self, leaf: str) -> str:
+        return "/".join((*self.prefix, leaf))
+
+    def plane(self, leaf: str):
+        return self.planes[self._key(leaf)]
+
+    def set_plane(self, leaf: str, value) -> None:
+        self.planes[self._key(leaf)] = value
+
+
 # --------------------------------------------------------------------------
 # norms / positions
 # --------------------------------------------------------------------------
@@ -215,15 +250,31 @@ def attention_apply(
         # are token-indexed, never rings).
         assert T == 1, "paged decode processes one token per step"
         assert paged is not None, "paged_decode needs (page_table, PULConfig)"
-        from repro.kernels.pul_attention import pul_paged_decode_attention
-        page_table, pul_cfg = paged
         idx = jnp.asarray(cache["idx"], jnp.int32).reshape(B)
-        k_new = k[:, 0].astype(cache["k"].dtype)
-        v_new = v[:, 0].astype(cache["v"].dtype)
-        out = pul_paged_decode_attention(
-            q[:, 0], cache["k"], cache["v"], page_table, idx,
-            scale=scale, softcap=cfg.attn_softcap, window=window,
-            k_new=k_new, v_new=v_new, cfg=pul_cfg)
+        if isinstance(paged, PagedSweep):
+            # single-sweep path: the kernel reads THIS layer out of the full
+            # per-layer planes (SMEM layer scalar) and commits k_new/v_new
+            # in its fused epilogue — no host-side view slicing or scatter
+            from repro.kernels.pul_attention import (
+                pul_paged_sweep_decode_attention)
+            kp, vp = paged.plane("k"), paged.plane("v")
+            k_new = k[:, 0].astype(kp.dtype)
+            v_new = v[:, 0].astype(vp.dtype)
+            out, kp, vp = pul_paged_sweep_decode_attention(
+                q[:, 0], kp, vp, paged.layer, paged.page_table, idx,
+                k_new, v_new, paged.frames, paged.offsets, scale=scale,
+                softcap=cfg.attn_softcap, window=window, cfg=paged.pul_cfg)
+            paged.set_plane("k", kp)
+            paged.set_plane("v", vp)
+        else:
+            from repro.kernels.pul_attention import pul_paged_decode_attention
+            page_table, pul_cfg = paged
+            k_new = k[:, 0].astype(cache["k"].dtype)
+            v_new = v[:, 0].astype(cache["v"].dtype)
+            out = pul_paged_decode_attention(
+                q[:, 0], cache["k"], cache["v"], page_table, idx,
+                scale=scale, softcap=cfg.attn_softcap, window=window,
+                k_new=k_new, v_new=v_new, cfg=pul_cfg)
         out = out[:, None]
         new_cache = {"k": k_new, "v": v_new, "idx": idx + 1}
     elif kind == "decode":

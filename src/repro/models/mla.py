@@ -83,18 +83,35 @@ def mla_apply(
     if kind == "paged_decode":
         assert T == 1, "paged decode processes one token per step"
         assert paged is not None, "paged_decode needs (page_table, PULConfig)"
-        from repro.kernels.pul_attention import pul_paged_mla_decode_attention
-        page_table, pul_cfg = paged
+        from repro.models.layers import PagedSweep
         idx = jnp.asarray(cache["idx"], jnp.int32).reshape(B)
         c_new, r_new = _compress_kv(p, x, cfg, positions)
-        c_new = c_new[:, 0].astype(cache["c_kv"].dtype)
-        r_new = r_new[:, 0].astype(cache["k_rope"].dtype)
         wkv_b_k = p["wkv_b"][..., :dn]                      # (kvr, H, dn)
         wkv_b_v = p["wkv_b"][..., dn:]                      # (kvr, H, dv)
         q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, wkv_b_k)[:, 0]
-        o_c = pul_paged_mla_decode_attention(
-            q_abs, q_rope[:, 0], cache["c_kv"], cache["k_rope"],
-            page_table, idx, c_new, r_new, scale=scale, cfg=pul_cfg)
+        if isinstance(paged, PagedSweep):
+            # single-sweep path over the full per-layer compressed planes;
+            # the fused epilogue commits c_new/r_new to the tail page
+            from repro.kernels.pul_attention import (
+                pul_paged_sweep_mla_decode_attention)
+            cp, rp = paged.plane("c_kv"), paged.plane("k_rope")
+            c_new = c_new[:, 0].astype(cp.dtype)
+            r_new = r_new[:, 0].astype(rp.dtype)
+            o_c, cp, rp = pul_paged_sweep_mla_decode_attention(
+                q_abs, q_rope[:, 0], cp, rp, paged.layer, paged.page_table,
+                idx, c_new, r_new, paged.frames, paged.offsets, scale=scale,
+                cfg=paged.pul_cfg)
+            paged.set_plane("c_kv", cp)
+            paged.set_plane("k_rope", rp)
+        else:
+            from repro.kernels.pul_attention import (
+                pul_paged_mla_decode_attention)
+            page_table, pul_cfg = paged
+            c_new = c_new[:, 0].astype(cache["c_kv"].dtype)
+            r_new = r_new[:, 0].astype(cache["k_rope"].dtype)
+            o_c = pul_paged_mla_decode_attention(
+                q_abs, q_rope[:, 0], cache["c_kv"], cache["k_rope"],
+                page_table, idx, c_new, r_new, scale=scale, cfg=pul_cfg)
         out = jnp.einsum("bhr,rhv->bhv", o_c, wkv_b_v)[:, None]
         new_cache = {"c_kv": c_new, "k_rope": r_new, "idx": idx + 1}
     elif kind == "decode":

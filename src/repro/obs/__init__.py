@@ -18,6 +18,7 @@ from repro.obs.metrics import (
     Sample,
     cache_economics,
     economics_into_registry,
+    serving_roofline,
 )
 from repro.obs.tracer import (
     NULL_TRACER,
@@ -33,5 +34,5 @@ __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "TraceEvent",
     "load_chrome_trace", "validate_chrome_trace", "page_events_from_chrome",
     "MetricsRegistry", "Sample", "cache_economics",
-    "economics_into_registry",
+    "economics_into_registry", "serving_roofline",
 ]

@@ -1,3 +1,4 @@
+from repro.serving.config import ServingConfig
 from repro.serving.engine import (
     EngineConfig,
     EngineMetrics,
@@ -8,7 +9,8 @@ from repro.serving.engine import (
     mean,
     percentile,
 )
-from repro.serving.kv_pages import (KVPagePool, PackedKVLayout,
+from repro.serving.kv_pages import (KV_LAYOUT_VERSION, KVPagePool,
+                                    KVStoreLayout, PackedKVLayout,
                                     PageConfig, PoolMetrics)
 from repro.serving.scheduler import (
     POLICIES,
@@ -17,9 +19,11 @@ from repro.serving.scheduler import (
 )
 
 __all__ = [
+    "ServingConfig",
     "EngineConfig", "Request", "ServingEngine",
     "PagedEngineConfig", "PagedServingEngine", "EngineMetrics",
-    "KVPagePool", "PackedKVLayout", "PageConfig", "PoolMetrics",
+    "KVPagePool", "KVStoreLayout", "KV_LAYOUT_VERSION", "PackedKVLayout",
+    "PageConfig", "PoolMetrics",
     "AdmissionScheduler", "SchedulerConfig", "POLICIES",
     "percentile", "mean",
 ]

@@ -147,6 +147,9 @@ class ServingEngine:
     on admission). The differential-test oracle for the paged engine."""
 
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig = EngineConfig()):
+        from repro.serving.config import ServingConfig
+        if isinstance(engine_cfg, ServingConfig):
+            engine_cfg = engine_cfg.dense()
         self.model_cfg = cfg
         self.cfg = engine_cfg
         self.model = zoo.build_model(cfg)
@@ -261,6 +264,14 @@ class PagedEngineConfig:
                                      # straight over pages (no dense assembly);
                                      # False keeps assemble-then-attend as the
                                      # oracle path
+    sweep_decode: bool = True        # kernel-true decode as ONE sweep: the
+                                     # layer scan walks the full per-layer
+                                     # planes (zero-copy views), the sweep
+                                     # kernel selects its layer via an SMEM
+                                     # scalar and commits the new token's
+                                     # rows in its fused epilogue. False
+                                     # keeps the per-layer launch + eager
+                                     # write_rows scatter (parity baseline)
     policy: str = "fcfs"            # "fcfs" | "priority" | "slo-edf"
     prefill_chunk_tokens: int = 0   # >0: prompts longer than this prefill in
                                     # page-aligned chunks, one pass per tick,
@@ -306,6 +317,9 @@ class PagedServingEngine:
                  engine_cfg: PagedEngineConfig = PagedEngineConfig(),
                  metrics_hook: Optional[Callable[[Dict[str, Any]], None]] = None,
                  tracer: Optional[Tracer] = None):
+        from repro.serving.config import ServingConfig
+        if isinstance(engine_cfg, ServingConfig):
+            engine_cfg = engine_cfg.paged()
         self.base_cfg = cfg
         self.model_cfg = dataclasses.replace(cfg, paged_kv=True)
         self.cfg = engine_cfg
@@ -334,13 +348,20 @@ class PagedServingEngine:
         self.layout = PackedKVLayout(self.model_cfg, B, S)
         hot = engine_cfg.hot_pages or (B * self.n_pages_per_slot + 2)
         gqa = cfg.num_heads // max(cfg.num_kv_heads, 1)
-        self.pool = KVPagePool(
-            PageConfig(page_tokens=P, hot_frames=hot + 2,
-                       preload_distance=engine_cfg.preload_distance,
-                       share_prefix_pages=engine_cfg.share_prefix_pages,
-                       trace=engine_cfg.shadow_check),
-            max(self.layout.features, 1), gqa_group=gqa,
-            tracer=self.tracer)
+        pcfg = PageConfig(page_tokens=P, hot_frames=hot + 2,
+                          preload_distance=engine_cfg.preload_distance,
+                          share_prefix_pages=engine_cfg.share_prefix_pages,
+                          trace=engine_cfg.shadow_check)
+        if self.layout.features:
+            # v2 hot tier: per-layer planes — the arrays the sweep kernel
+            # walks ARE the store, so page views under jit are zero-copy
+            self.pool = KVPagePool(pcfg, layout=self.layout, gqa_group=gqa,
+                                   tracer=self.tracer)
+        else:
+            # no pageable KV (pure-SSM archs): a vestigial packed pool keeps
+            # the allocator/trace machinery alive with 1 feature column
+            self.pool = KVPagePool(pcfg, 1, gqa_group=gqa,
+                                   tracer=self.tracer)
         # shadow mode: an incremental lifecycle checker consumes the pool
         # trace every tick (O(new events) per tick), so a violation names
         # the offending event at the tick it happened
@@ -362,6 +383,12 @@ class PagedServingEngine:
         d = max(1, min(self.pool.distance, self.pool.cfg.fifo_depth))
         self._paged_decode = jax.jit(functools.partial(
             self.model.paged_decode_step, pul_distance=d))
+        # single-sweep decode: planes ride as a donated argument so the
+        # fused in-kernel commit updates them in place (no copy of the
+        # store per step); returns (logits, new_tree, planes)
+        self._sweep_decode = jax.jit(functools.partial(
+            self.model.paged_decode_step, pul_distance=d),
+            donate_argnums=(3,))
 
         # slot state
         self.slot_req: List[Optional[Request]] = [None] * B
@@ -830,15 +857,16 @@ class PagedServingEngine:
         for i in self._live_slots():
             pids = self.slot_pages[i]
             frames[i, :len(pids)] = self.pool.frames_of(pids)
+        store = self.pool.packed_store()
         if self.cfg.use_pallas_gather:
             from repro.kernels import pul_page_gather
             from repro.core import PULConfig
             d = min(self.pool.distance, self.pool.cfg.fifo_depth)
             packed = pul_page_gather(
-                self.pool.store, jnp.asarray(frames),
+                store, jnp.asarray(frames),
                 cfg=PULConfig(distance=max(1, d)))
         else:
-            packed = self.pool.store[jnp.asarray(frames)].reshape(
+            packed = store[jnp.asarray(frames)].reshape(
                 B, self.cfg.max_seq, -1)
         tree = self.layout.unpack_into(self.resident, packed)
         return self._set_idx(tree, self.slot_len)
@@ -860,17 +888,61 @@ class PagedServingEngine:
                 self.slot_pages[i].append(pid)
                 working.add(pid)
 
-    def _paged_kernel_decode(self, live, toks, pos0):
-        """Kernel-true decode: attention streams straight over page frames
-        (`pul_paged_decode_attention` / the MLA variant); no dense per-slot
-        KV view is assembled. Returns (logits, new_tree) where new_tree's
-        pageable leaves hold only the current token's rows."""
+    def _sweep_cache_tree(self):
+        """Decode cache tree for the single-sweep path: pageable leaves are
+        tiny placeholders — the sweep branch reads only the tree POSITION
+        (the KV data rides in the donated planes), so no page view is ever
+        materialized into the tree. Grouped placeholders keep a leading
+        layer axis so the backbone scan can slice them; non-pageable leaves
+        (SSM state, idx) come from `resident` as usual."""
+        pageable = {e.keys: e for e in self.layout.entries}
+
+        def repl(path, leaf):
+            e = pageable.get(_path_keys(path))
+            if e is None:
+                return leaf
+            if e.grouped:
+                return jnp.zeros((e.shape[0], 1), leaf.dtype)
+            return jnp.zeros((1,), leaf.dtype)
+
+        return jax.tree_util.tree_map_with_path(repl, self.resident)
+
+    def _paged_kernel_decode(self, live, toks, pos0, frames, offs):
+        """Kernel-true decode: attention streams straight over page frames;
+        no dense per-slot KV view is assembled.
+
+        ``sweep_decode=True`` (default) runs ONE sweep: the layer scan
+        carries the full per-layer planes (``layer_view`` is zero-copy —
+        the plane IS the stored array), the kernel picks its layer via an
+        SMEM scalar, and its fused epilogue commits the current token's
+        rows into each slot's tail page inside the same launch. The planes
+        are donated to the jit call, so the hot tier updates in place.
+        ``sweep_decode=False`` keeps per-layer launches over per-layer
+        views, with the caller doing the eager write_rows scatter (the
+        parity baseline).
+
+        Returns (logits, new_tree); new_tree's pageable leaves hold only
+        the current token's rows."""
         B = self.cfg.batch_slots
         page_table = np.full((B, self.n_pages_per_slot), ZERO_FRAME, np.int32)
         for i in live:
             pids = self.slot_pages[i]
             page_table[i, :len(pids)] = self.pool.frames_of(pids)
-        tree = self.layout.page_views(self.resident, self.pool.store)
+        if self.cfg.sweep_decode:
+            tree = self._set_idx(self._sweep_cache_tree(), self.slot_len)
+            # account + lifecycle-trace the fused commit BEFORE the launch
+            # (events must precede the write they describe)
+            self.pool.note_fused_commit(frames, offs)
+            logits, new_tree, planes = self._sweep_decode(
+                self.params, {"tokens": jnp.asarray(toks),
+                              "pos0": jnp.asarray(pos0),
+                              "page_table": jnp.asarray(page_table),
+                              "frames": jnp.asarray(frames),
+                              "offsets": jnp.asarray(offs)},
+                tree, self.pool.planes)
+            self.pool.planes = planes
+            return logits, new_tree
+        tree = self.layout.page_view_tree(self.resident, self.pool.planes)
         tree = self._set_idx(tree, self.slot_len)
         return self._paged_decode(
             self.params, {"tokens": jnp.asarray(toks),
@@ -904,9 +976,22 @@ class PagedServingEngine:
         for i in live:
             toks[i, 0] = self.slot_req[i].out_tokens[-1]
             pos0[i] = self.slot_len[i]
+        # tail-page commit coordinates for every slot this step (TRASH sink
+        # for slots not decoding); the fused sweep needs them BEFORE launch
+        P = self.cfg.page_tokens
+        frames = np.full((B,), TRASH_FRAME, np.int32)
+        offs = np.zeros((B,), np.int32)
+        if self.layout.features:
+            for i in live:
+                pos = int(self.slot_len[i])
+                pid = self.slot_pages[i][pos // P]
+                frames[i] = self.pool.pages[pid].frame
+                offs[i] = pos % P
         kernel_true = self.cfg.use_paged_kernel and self.layout.features
+        sweep = kernel_true and self.cfg.sweep_decode
         if kernel_true:
-            logits, new_tree = self._paged_kernel_decode(live, toks, pos0)
+            logits, new_tree = self._paged_kernel_decode(
+                live, toks, pos0, frames, offs)
         else:
             tree = self._assemble()
             logits, new_tree = self._decode(
@@ -915,18 +1000,11 @@ class PagedServingEngine:
         self.metrics.decode_steps += 1
 
         # write the step's new KV rows back into each live slot's tail page
-        if self.layout.features:
-            P = self.cfg.page_tokens
-            rows = (self.layout.pack_new_rows(new_tree) if kernel_true
+        # (the sweep already committed them in its fused epilogue)
+        if self.layout.features and not sweep:
+            rows = (self.layout._pack_new_rows_impl(new_tree) if kernel_true
                     else self.layout.pack_rows(new_tree,
                                                jnp.asarray(self.slot_len)))
-            frames = np.full((B,), TRASH_FRAME, np.int32)
-            offs = np.zeros((B,), np.int32)
-            for i in live:
-                pos = int(self.slot_len[i])
-                pid = self.slot_pages[i][pos // P]
-                frames[i] = self.pool.pages[pid].frame
-                offs[i] = pos % P
             self.pool.write_rows(frames, offs, rows)
         if kernel_true:
             self._merge_nonpageable(new_tree)

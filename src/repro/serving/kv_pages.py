@@ -5,7 +5,7 @@ split into fixed-size *pages* of ``page_tokens`` tokens (tile-aligned per
 ``core.pul.TPU_SUBLANE``), living in a pool of physical frames split across
 
   * a **hot tier** — the fast memory the decode kernels read (HBM on TPU;
-    a jnp array here), bounded at ``hot_frames`` pages, and
+    jnp arrays here), bounded at ``hot_frames`` pages, and
   * a **cold tier** — the slow memory (host DRAM / remote HBM; a numpy dict
     here) that evicted pages spill to, with real data movement both ways.
 
@@ -16,14 +16,39 @@ vs per-page decode compute, and the restore batch is replayed through the
 discrete-event twin (`core.dma`) so the engine reports how much restore
 latency the schedule hides — the paper's claim, measured per serving step.
 
+Hot storage comes in two layouts, both behind the versioned
+:class:`KVStoreLayout` protocol (``KV_LAYOUT_VERSION``):
+
+  * **per-layer planes** (v2, the kernel-true serving layout): each pageable
+    cache leaf owns a *plane* whose leading axis is the layer (scan-group)
+    index — attention leaves are ``(L, NF, K, P, hd)``, MLA's compressed
+    leaves ``(L, NF, P, kvr)``. A plane IS the page-frame layout the decode
+    kernels consume, so ``layer_view`` / ``page_view_tree`` are pure
+    indexing — zero-copy under jit, no gather, no transpose — and the
+    single-sweep decode kernel walks all layers of one plane with a
+    prefetched layer scalar. The current token's rows are committed either
+    *fused* (in the sweep kernel's epilogue, see
+    ``kernels.pul_paged_sweep_decode_attention``) or *eagerly* via
+    :meth:`KVStoreLayout.commit_token`.
+  * **packed rows** (v1, the portable/oracle layout): token t of a page is
+    one ``(F,)`` row concatenating every layer's features
+    (:class:`PackedKVLayout` ``pack``/``unpack``); kept for the dense
+    assembly oracle and for direct pool users (``KVPagePool(pcfg,
+    features=F)``).
+
+The cold tier always holds packed ``(P, F)`` rows regardless of the hot
+layout, so UNLOAD/PRELOAD byte accounting, the DMA twin's KV-page workload,
+and the lifecycle sanitizer are layout-independent.
+
 Page *contents* pack every attention layer's K and V for a token range into
-one row (`PackedKVLayout`), so one logical page id covers the whole model
-and a prefix page can be shared by every request with that prompt prefix
-(refcounted; only full, immutable prompt pages are shared).
+one logical page, so one page id covers the whole model and a prefix page
+can be shared by every request with that prompt prefix (refcounted; only
+full, immutable prompt pages are shared).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -51,6 +76,11 @@ from repro.core.pul import (
 # matches max_seq): standard GQA attention and MLA's compressed cache
 _KV_LEAF_KEYS = ("k", "v", "c_kv", "k_rope")
 
+#: Version of the KV store-layout protocol. v1 was the ad-hoc
+#: ``page_views``/``pack_new_rows`` pair over a single packed store plane;
+#: v2 is the per-layer-plane :class:`KVStoreLayout` protocol below.
+KV_LAYOUT_VERSION = 2
+
 
 def _path_keys(path) -> Tuple[str, ...]:
     return tuple(getattr(p, "key", str(p)) for p in path)
@@ -64,15 +94,108 @@ class _LeafEntry:
     nfeat: int                  # packed per-token features of this leaf
     offset: int                 # column offset in the packed row
 
+    @property
+    def plane_key(self) -> str:
+        """Stable string id of this entry's store plane ("groups/0:global/k")."""
+        return "/".join(self.keys)
 
-class PackedKVLayout:
-    """Mapping between a model's cache tree and packed (B, S, F) KV rows.
+    @property
+    def feat(self) -> Tuple[int, ...]:
+        """Per-token feature dims: (K, hd) for attention, (kvr,) for MLA."""
+        return self.shape[3:] if self.grouped else self.shape[2:]
 
-    Token t of slot b occupies row (b, t): the concatenation over every
-    pageable cache leaf of that token's features (all layers, all kv heads).
-    `pack`/`unpack` are pure jnp functions (jit-able, shape-polymorphic in
-    S so prefill buckets and the decode max_seq share one layout).
+    @property
+    def layers(self) -> int:
+        """Leading layer (scan-group) extent of this entry's plane."""
+        return self.shape[0] if self.grouped else 1
+
+
+class KVStoreLayout:
+    """Versioned protocol between the page pool, the decode kernels, the
+    engine, and the DMA benchmark (``KV_LAYOUT_VERSION = 2``).
+
+    A layout owns the mapping between a model's cache tree and physical
+    page *planes* — one jnp array per pageable cache leaf, laid out so the
+    kernels consume it directly:
+
+      * attention leaves: ``(L, NF, K, P, hd)`` (layer, frame, kv head,
+        page token, head dim)
+      * MLA compressed leaves: ``(L, NF, P, feat)``
+
+    with ``L`` the leaf's layer extent (scan groups; 1 for unscanned
+    leaves), ``NF`` the pool's hot-frame count, and ``P`` tokens per page.
+
+    Required interface (all pure jnp unless stated):
+
+      * :meth:`init_planes` — allocate zeroed planes for ``NF`` frames.
+      * :meth:`layer_view` — ``{plane_key: (NF, ...) page frames}`` of one
+        layer. **Zero-copy**: pure leading-axis indexing, no gather or
+        transpose under jit (property-tested in
+        ``tests/test_paged_sweep.py``).
+      * :meth:`page_view_tree` — a cache tree whose pageable leaves are
+        whole planes (grouped leaves keep their leading scan axis); the
+        per-layer decode kernels address it directly.
+      * :meth:`commit_token` — the *eager* commit: scatter one packed row
+        per slot into ``(frame, offset)``. The *fused* commit is the same
+        contract implemented in the sweep kernel's epilogue
+        (``kernels.pul_paged_sweep_decode_attention``); the pool accounts
+        it via :meth:`KVPagePool.note_fused_commit`.
+      * :meth:`read_frame_packed` / :meth:`write_frame_packed` — bridge one
+        frame to the packed ``(P, F)`` row layout the cold tier and DMA
+        descriptors use (tier movement is layout-independent).
+      * :meth:`pack_planes` — materialize the packed ``(NF, P, F)`` store
+        (a copy; oracle/assembly path only).
+
+    ``features`` (the packed row width F) and ``entries`` describe the
+    geometry; ``layout_version`` pins the protocol revision a layout
+    implements.
     """
+
+    layout_version: int = KV_LAYOUT_VERSION
+    features: int = 0
+    entries: List[_LeafEntry] = []
+
+    def init_planes(self, n_frames: int, page_tokens: int,
+                    dtype) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def layer_view(self, planes: Dict[str, jnp.ndarray],
+                   layer: int) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def page_view_tree(self, tree: Any,
+                       planes: Dict[str, jnp.ndarray]) -> Any:
+        raise NotImplementedError
+
+    def commit_token(self, planes: Dict[str, jnp.ndarray],
+                     rows: jnp.ndarray, frames, offsets,
+                     dtype) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def read_frame_packed(self, planes: Dict[str, jnp.ndarray],
+                          frame: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def write_frame_packed(self, planes: Dict[str, jnp.ndarray], frame: int,
+                           rows, dtype) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def pack_planes(self, planes: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class PackedKVLayout(KVStoreLayout):
+    """Mapping between a model's cache tree and its paged KV store.
+
+    Implements :class:`KVStoreLayout` v2 (per-layer planes) and keeps the
+    v1 packed-row codec: token t of slot b occupies row (b, t) — the
+    concatenation over every pageable cache leaf of that token's features
+    (all layers, all kv heads). `pack`/`unpack` are pure jnp functions
+    (jit-able, shape-polymorphic in S so prefill buckets and the decode
+    max_seq share one layout).
+    """
+
+    layout_version = KV_LAYOUT_VERSION
 
     def __init__(self, cfg: ModelConfig, batch: int, max_seq: int):
         from repro.models import transformer as T
@@ -135,13 +258,7 @@ class PackedKVLayout:
                 outs.append(leaf[rows, i].reshape(B, -1))
         return jnp.concatenate(outs, axis=-1)
 
-    def pack_new_rows(self, tree: Any) -> jnp.ndarray:
-        """Pack a paged-decode output tree's NEW-TOKEN rows into (B, F).
-
-        `tree` is the tree returned by the kernel-true paged decode: every
-        pageable leaf holds only the current token's features — grouped
-        (G, B, feat...) or ungrouped (B, feat...) — in the same entry order
-        as `pack`, so the result scatters straight into tail pages."""
+    def _pack_new_rows_impl(self, tree: Any) -> jnp.ndarray:
         outs = []
         for e in self.entries:
             leaf = self._get(tree, e.keys)
@@ -152,20 +269,29 @@ class PackedKVLayout:
                 outs.append(leaf.reshape(leaf.shape[0], -1))
         return jnp.concatenate(outs, axis=-1)
 
-    def page_views(self, tree: Any, store: jnp.ndarray) -> Any:
-        """Return `tree` with every pageable leaf replaced by a kernel-
-        addressable view of the physical page `store` ((NP, P, F)).
+    def pack_new_rows(self, tree: Any) -> jnp.ndarray:
+        """Deprecated v1 API: pack a paged-decode output tree's NEW-TOKEN
+        rows into (B, F) for an out-of-kernel scatter.
 
-        Attention leaves ((..., S, K, hd) dense) become (..., NP, K, P, hd)
-        page frames — the layout `pul_paged_decode_attention` consumes; MLA
-        leaves ((..., S, kvr) head-shared) become (..., NP, P, kvr) for
-        `pul_paged_mla_decode_attention`. Grouped entries keep their leading
-        scan axis. Non-pageable leaves (SSM state, idx) pass through."""
+        `tree` holds only the current token's features per pageable leaf —
+        grouped (G, B, feat...) or ungrouped (B, feat...) — in `pack` entry
+        order. Superseded by the :class:`KVStoreLayout` commit contract:
+        the sweep kernel commits rows in its fused epilogue
+        (`KVPagePool.note_fused_commit`) and the eager fallback is
+        :meth:`commit_token` / `KVPagePool.write_rows`."""
+        warnings.warn(
+            "PackedKVLayout.pack_new_rows is deprecated; the KVStoreLayout "
+            "protocol commits new-token rows fused (sweep-kernel epilogue) "
+            "or eagerly via commit_token/KVPagePool.write_rows",
+            PendingDeprecationWarning, stacklevel=2)
+        return self._pack_new_rows_impl(tree)
+
+    def _page_views_packed(self, tree: Any, store: jnp.ndarray) -> Any:
         NP, P, _ = store.shape
         new = jax.tree_util.tree_map(lambda x: x, tree)
         for e in self.entries:
             cols = store[:, :, e.offset:e.offset + e.nfeat]   # (NP, P, nfeat)
-            feat = e.shape[3:] if e.grouped else e.shape[2:]
+            feat = e.feat
             if e.grouped:
                 G = e.shape[0]
                 view = jnp.moveaxis(cols.reshape(NP, P, G, *feat), 2, 0)
@@ -178,6 +304,20 @@ class PackedKVLayout:
                 node = node[k]
             node[e.keys[-1]] = view
         return new
+
+    def page_views(self, tree: Any, store: jnp.ndarray) -> Any:
+        """Deprecated v1 API: slice a PACKED store ((NP, P, F)) into
+        per-layer kernel views — a gather/transpose under jit every step.
+
+        Superseded by :meth:`page_view_tree` over per-layer planes, where
+        the "view" is the stored array itself (zero-copy). Kept for one
+        release for direct packed-store users."""
+        warnings.warn(
+            "PackedKVLayout.page_views is deprecated; use the KVStoreLayout "
+            "protocol (page_view_tree/layer_view over per-layer planes, "
+            "which are zero-copy) instead",
+            PendingDeprecationWarning, stacklevel=2)
+        return self._page_views_packed(tree, store)
 
     def unpack_into(self, tree: Any, packed: jnp.ndarray) -> Any:
         """Return `tree` with every pageable leaf replaced from `packed`
@@ -199,6 +339,119 @@ class PackedKVLayout:
                 node = node[k]
             node[e.keys[-1]] = leaf.astype(self._get(tree, e.keys).dtype)
         return new
+
+    # ------------------------------------------------------------------ #
+    # KVStoreLayout v2: per-layer planes
+    # ------------------------------------------------------------------ #
+    def plane_shape(self, e: _LeafEntry, n_frames: int,
+                    page_tokens: int) -> Tuple[int, ...]:
+        feat = e.feat
+        if len(feat) == 2:                  # attention: (L, NF, K, P, hd)
+            return (e.layers, n_frames, feat[0], page_tokens, feat[1])
+        return (e.layers, n_frames, page_tokens, *feat)   # MLA: (L, NF, P, f)
+
+    def init_planes(self, n_frames: int, page_tokens: int,
+                    dtype) -> Dict[str, jnp.ndarray]:
+        """Zeroed per-layer page planes for `n_frames` physical frames."""
+        return {e.plane_key: jnp.zeros(
+                    self.plane_shape(e, n_frames, page_tokens), dtype)
+                for e in self.entries}
+
+    def layer_view(self, planes: Dict[str, jnp.ndarray],
+                   layer: int) -> Dict[str, jnp.ndarray]:
+        """One layer's page frames per plane — pure leading-axis indexing
+        (zero-copy under jit): attention planes yield (NF, K, P, hd),
+        MLA planes (NF, P, feat). Unscanned (L == 1) entries ignore
+        `layer`."""
+        return {e.plane_key:
+                planes[e.plane_key][layer if e.layers > 1 else 0]
+                for e in self.entries}
+
+    def page_view_tree(self, tree: Any,
+                       planes: Dict[str, jnp.ndarray]) -> Any:
+        """Return `tree` with every pageable leaf replaced by its plane —
+        THE stored array, not a slice of one (grouped leaves keep their
+        leading scan axis; unscanned leaves drop their singleton layer
+        axis). This is what makes the kernel-true decode zero-copy: the
+        leaf the kernel addresses is the buffer the pool owns."""
+        new = jax.tree_util.tree_map(lambda x: x, tree)
+        for e in self.entries:
+            plane = planes[e.plane_key]
+            view = plane if e.grouped else plane[0]
+            node = new
+            for k in e.keys[:-1]:
+                node = node[k]
+            node[e.keys[-1]] = view
+        return new
+
+    def commit_token(self, planes: Dict[str, jnp.ndarray],
+                     rows: jnp.ndarray, frames, offsets,
+                     dtype) -> Dict[str, jnp.ndarray]:
+        """Eager commit: scatter one packed (F,) row per slot into its
+        (frame, offset) page position across every plane. The fused
+        equivalent runs in the sweep kernel's epilogue."""
+        frames = jnp.asarray(frames, jnp.int32)
+        offsets = jnp.asarray(offsets, jnp.int32)
+        B = rows.shape[0]
+        out = dict(planes)
+        for e in self.entries:
+            cols = rows[:, e.offset:e.offset + e.nfeat].astype(dtype)
+            plane = planes[e.plane_key]
+            feat = e.feat
+            if len(feat) == 2:
+                vals = cols.reshape(B, e.layers, *feat)       # (B, L, K, hd)
+                # advanced indices (frames @ axis 1, offsets @ axis 3) are
+                # separated by a slice, so the broadcast B axis leads
+                out[e.plane_key] = plane.at[:, frames, :, offsets, :].set(vals)
+            else:
+                vals = cols.reshape(B, e.layers, *feat)       # (B, L, f)
+                # adjacent advanced indices keep their position: (L, B, f)
+                out[e.plane_key] = plane.at[:, frames, offsets, :].set(
+                    jnp.moveaxis(vals, 0, 1))
+        return out
+
+    def read_frame_packed(self, planes: Dict[str, jnp.ndarray],
+                          frame: int) -> np.ndarray:
+        """One frame's packed (P, F) rows (numpy; cold-tier spill format)."""
+        cols = []
+        for e in self.entries:
+            sl = np.asarray(planes[e.plane_key][:, frame])
+            if len(e.feat) == 2:            # (L, K, P, hd) -> (P, L*K*hd)
+                sl = sl.transpose(2, 0, 1, 3)
+            else:                           # (L, P, f) -> (P, L*f)
+                sl = sl.transpose(1, 0, 2)
+            cols.append(sl.reshape(sl.shape[0], -1))
+        return np.concatenate(cols, axis=-1)
+
+    def write_frame_packed(self, planes: Dict[str, jnp.ndarray], frame: int,
+                           rows, dtype) -> Dict[str, jnp.ndarray]:
+        """Fill one frame from packed (P, F) rows (cold-tier restore /
+        prefill page fill); returns the updated planes dict."""
+        rows = jnp.asarray(rows).astype(dtype)
+        P = rows.shape[0]
+        out = dict(planes)
+        for e in self.entries:
+            cols = rows[:, e.offset:e.offset + e.nfeat]
+            feat = e.feat
+            if len(feat) == 2:              # (P, L, K, hd) -> (L, K, P, hd)
+                vals = cols.reshape(P, e.layers, *feat).transpose(1, 2, 0, 3)
+            else:                           # (P, L, f) -> (L, P, f)
+                vals = cols.reshape(P, e.layers, *feat).transpose(1, 0, 2)
+            out[e.plane_key] = planes[e.plane_key].at[:, frame].set(vals)
+        return out
+
+    def pack_planes(self, planes: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Materialize the packed (NF, P, F) store from the planes — a
+        COPY; only the dense-assembly oracle path pays it."""
+        cols = []
+        for e in self.entries:
+            plane = planes[e.plane_key]
+            if len(e.feat) == 2:            # (L,NF,K,P,hd) -> (NF,P,L,K,hd)
+                sl = jnp.transpose(plane, (1, 3, 0, 2, 4))
+            else:                           # (L,NF,P,f) -> (NF,P,L,f)
+                sl = jnp.transpose(plane, (1, 2, 0, 3))
+            cols.append(sl.reshape(sl.shape[0], sl.shape[1], -1))
+        return jnp.concatenate(cols, axis=-1)
 
 
 # -------------------------------------------------------------------------- #
@@ -236,7 +489,8 @@ class PoolMetrics:
     modeled_restore_stall: float = 0.0  # PE stall within those batches
     # cache-economics counters (repro.obs.metrics.cache_economics):
     bytes_hot_written: int = 0  # bytes scattered into the hot store (prefill
-                                # page fills + decode row writes)
+                                # page fills + decode row commits, fused or
+                                # eager)
     # prefetch-quality counters for planned d* restores (accuracy /
     # timeliness / coverage, per the prefetching survey in PAPERS.md):
     planned_preloads: int = 0   # restores issued through ensure_hot's
@@ -322,18 +576,48 @@ RESERVED_FRAMES = 2
 
 
 class KVPagePool:
-    """Physical page frames + residency + refcounts + tier movement."""
+    """Physical page frames + residency + refcounts + tier movement.
 
-    def __init__(self, pcfg: PageConfig, features: int, *,
+    Two hot-storage modes behind one lifecycle:
+
+      * ``KVPagePool(pcfg, features=F)`` — packed mode (v1): one
+        ``(NF, P, F)`` store array, exposed as ``pool.store``.
+      * ``KVPagePool(pcfg, layout=<KVStoreLayout>)`` — per-layer mode (v2):
+        storage is ``pool.planes`` (one plane per pageable cache leaf; see
+        :class:`KVStoreLayout`) and all data movement delegates to the
+        layout. The packed view, when the oracle path needs it, is
+        :meth:`packed_store`.
+
+    Frame ids, page ids, refcounts, eviction order, DMA descriptors, and
+    the lifecycle trace are identical across modes — a frame spans every
+    layer plane, so the cold tier and byte accounting stay packed."""
+
+    def __init__(self, pcfg: PageConfig, features: Optional[int] = None, *,
+                 layout: Optional[KVStoreLayout] = None,
                  gqa_group: int = 1, dtype=jnp.bfloat16, tracer=None):
+        if (features is None) == (layout is None):
+            raise ValueError(
+                "KVPagePool takes exactly one of `features` (packed mode) "
+                "or `layout` (per-layer mode)")
         self.cfg = pcfg
-        self.features = features
+        self.layout = layout
+        self.features = layout.features if layout is not None else features
         self.dtype = dtype
         P = pcfg.page_tokens
-        self.page_bytes = P * features * jnp.dtype(dtype).itemsize
-        self.row_bytes = features * jnp.dtype(dtype).itemsize
+        self.page_bytes = P * self.features * jnp.dtype(dtype).itemsize
+        self.row_bytes = self.features * jnp.dtype(dtype).itemsize
         n = max(pcfg.hot_frames, RESERVED_FRAMES + 1)
-        self.store = jnp.zeros((n, P, features), dtype)
+        if layout is not None:
+            self.planes: Dict[str, jnp.ndarray] = layout.init_planes(
+                n, P, dtype)
+            self._n_frames = n
+            # layer extent of the store (sweep-kernel SMEM scalar range +
+            # per-layer trace provenance)
+            self.n_layers = max((e.layers for e in layout.entries), default=1)
+        else:
+            self.store = jnp.zeros((n, P, self.features), dtype)
+            self._n_frames = n
+            self.n_layers = 1
         self.free_frames: List[int] = list(range(RESERVED_FRAMES, n))
         self.pages: "OrderedDict[int, _PageMeta]" = OrderedDict()
         self.cold: Dict[int, np.ndarray] = {}
@@ -352,19 +636,19 @@ class KVPagePool:
         self._clock = 0
         # restore planning: d* from page transfer time vs per-page compute
         self.plan = plan_kv_page_stream(
-            page_tokens=P, kv_features=features, tier=pcfg.slow_tier,
+            page_tokens=P, kv_features=self.features, tier=pcfg.slow_tier,
             pe=pcfg.pe, gqa_group=gqa_group, fifo_depth=pcfg.fifo_depth,
             itemsize=jnp.dtype(dtype).itemsize)
         self.distance = pcfg.preload_distance or self.plan.cfg.distance
         self._dma = DMAEngine(pcfg.slow_tier, pcfg.pe,
                               fifo_depth=pcfg.fifo_depth,
                               tracer=self.tracer)
-        self._flops_per_page = kv_page_flops(P, features, gqa_group)
+        self._flops_per_page = kv_page_flops(P, self.features, gqa_group)
 
     # ------------------------------------------------------------------ #
     @property
     def hot_frames(self) -> int:
-        return self.store.shape[0]
+        return self._n_frames
 
     @property
     def capacity(self) -> int:
@@ -373,6 +657,38 @@ class KVPagePool:
 
     def hot_in_use(self) -> int:
         return sum(1 for m in self.pages.values() if m.frame is not None)
+
+    def packed_store(self) -> jnp.ndarray:
+        """The packed (NF, P, F) store: the array itself in packed mode, a
+        materialized copy of the planes in per-layer mode (oracle path)."""
+        if self.layout is not None:
+            return self.layout.pack_planes(self.planes)
+        return self.store
+
+    # ------------------------------------------------------------------ #
+    # layout-dispatched frame data movement (cold tier stays packed)
+    # ------------------------------------------------------------------ #
+    def _read_frame(self, frame: int) -> np.ndarray:
+        if self.layout is not None:
+            return self.layout.read_frame_packed(self.planes, frame)
+        return np.asarray(self.store[frame])
+
+    def _write_frame(self, frame: int, rows) -> None:
+        if self.layout is not None:
+            self.planes = self.layout.write_frame_packed(
+                self.planes, frame, rows, self.dtype)
+        else:
+            self.store = self.store.at[frame].set(
+                jnp.asarray(rows).astype(self.dtype))
+
+    def _scatter_rows(self, frames, offsets, rows) -> None:
+        if self.layout is not None:
+            self.planes = self.layout.commit_token(
+                self.planes, rows, frames, offsets, self.dtype)
+        else:
+            self.store = self.store.at[
+                jnp.asarray(frames), jnp.asarray(offsets)].set(
+                    rows.astype(self.dtype))
 
     # ------------------------------------------------------------------ #
     def _emit(self, kind: EventKind, **fields) -> None:
@@ -483,7 +799,7 @@ class KVPagePool:
             self.metrics.wasted_preloads += 1
         self._emit(EventKind.EVICT, pid=pid, frame=meta.frame, cause=cause,
                    pinned=tuple(sorted(pinned)))
-        self.cold[pid] = np.asarray(self.store[meta.frame])
+        self.cold[pid] = self._read_frame(meta.frame)
         self.free_frames.append(meta.frame)
         self.metrics.evictions += 1
         self.metrics.descriptors.append(TransferRequest(
@@ -516,7 +832,7 @@ class KVPagePool:
             meta = self.pages[pid]
             frame = self._take_frame(needed=pids)
             data = self.cold.pop(pid)
-            self.store = self.store.at[frame].set(jnp.asarray(data))
+            self._write_frame(frame, data)
             meta.frame = frame
             meta.pending_read = True
             self._emit(EventKind.RESTORE, pid=pid, frame=frame)
@@ -566,13 +882,15 @@ class KVPagePool:
         pad = P - n_valid
         if pad:
             rows = jnp.pad(rows[:n_valid], ((0, pad), (0, 0)))
-        self.store = self.store.at[meta.frame].set(rows.astype(self.dtype))
+        self._write_frame(meta.frame, rows)
         self.metrics.bytes_hot_written += self.page_bytes
 
     def write_rows(self, frames: np.ndarray, offsets: np.ndarray,
                    rows: jnp.ndarray) -> None:
-        """Scatter one packed row per slot into (frame, offset) positions.
-        Inactive slots should point at TRASH_FRAME."""
+        """Eagerly commit one packed row per slot into (frame, offset)
+        positions — the out-of-kernel half of the KVStoreLayout commit
+        contract (`commit_token`). Inactive slots should point at
+        TRASH_FRAME."""
         # the event precedes validation so a zero-frame write reaches the
         # sanitizer trace even though the assert stops the scatter
         self._emit(EventKind.WRITE_ROWS,
@@ -582,6 +900,21 @@ class KVPagePool:
         assert ZERO_FRAME not in frames.tolist(), "write to the zero frame"
         live = sum(1 for f in frames.tolist() if f != TRASH_FRAME)
         self.metrics.bytes_hot_written += live * self.row_bytes
-        self.store = self.store.at[
-            jnp.asarray(frames), jnp.asarray(offsets)].set(
-                rows.astype(self.dtype))
+        self._scatter_rows(frames, offsets, rows)
+
+    def note_fused_commit(self, frames: np.ndarray,
+                          offsets: np.ndarray) -> None:
+        """Account a FUSED commit: the sweep kernel's epilogue scatters the
+        current token's rows into the planes in-kernel (one write per
+        layer), so no host-side scatter runs — only validation, byte
+        accounting, and the lifecycle trace happen here. Call BEFORE the
+        kernel so the events precede the writes they describe (the same
+        order `write_rows` guarantees), and so a zero-frame table stops
+        the step before the kernel touches the reserved frame."""
+        del offsets  # positions are per-layer-identical; frames identify pages
+        for layer in range(self.n_layers):
+            self._emit(EventKind.WRITE_ROWS, layer=layer,
+                       frames=tuple(int(f) for f in frames))
+        assert ZERO_FRAME not in frames.tolist(), "write to the zero frame"
+        live = sum(1 for f in frames.tolist() if f != TRASH_FRAME)
+        self.metrics.bytes_hot_written += live * self.row_bytes

@@ -374,9 +374,95 @@ def test_findings_carry_location():
     assert "fixture.py:2" in f.describe()
 
 
+# ======================================================================== #
+# PUL107: non-donated buffer updates in jitted functions
+# ======================================================================== #
+
+def test_undonated_at_update_in_jitted_function_flagged():
+    findings = _lint("""
+        import jax
+
+        @jax.jit
+        def commit(store, rows, idx):
+            return store.at[idx].set(rows)
+    """)
+    assert [f.rule for f in findings] == ["PUL107"]
+    assert "store" in findings[0].message
+
+
+def test_donated_argnums_at_update_clean():
+    assert _rules("""
+        import jax
+
+        def commit(store, rows, idx):
+            return store.at[idx].set(rows)
+
+        commit_jit = jax.jit(commit, donate_argnums=(0,))
+    """) == []
+
+
+def test_donate_argnames_at_update_clean():
+    assert _rules("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnames=("store",))
+        def commit(store, rows, idx):
+            return store.at[idx].add(rows)
+    """) == []
+
+
+def test_partial_alias_shifts_donated_argnums():
+    # jit(partial(f, a), donate_argnums=(0,)) donates f's SECOND arg: the
+    # partial consumed the first positional slot
+    assert _rules("""
+        import functools
+        import jax
+
+        def commit(cfg, store, rows):
+            return store.at[0].set(rows)
+
+        bound = functools.partial(commit, object())
+        commit_jit = jax.jit(bound, donate_argnums=(0,))
+    """) == []
+
+
+def test_at_update_on_local_value_clean():
+    # values built inside the function can alias freely; only parameter
+    # buffers need donation
+    assert _rules("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def fresh(idx):
+            buf = jnp.zeros((4,))
+            return buf.at[idx].set(1.0)
+    """) == []
+
+
+def test_at_update_in_pallas_kernel_body_exempt():
+    # Pallas Refs mutate in place by construction; `*_kernel` bodies are
+    # jit contexts for the other rules but exempt from PUL107
+    assert _rules("""
+        def sweep_kernel(x_ref, o_ref):
+            o_ref[...] = x_ref.at[0].set(1.0)
+    """) == []
+
+
+def test_pul107_waivable_inline():
+    assert _rules("""
+        import jax
+
+        @jax.jit
+        def commit(store, idx):
+            return store.at[idx].set(0.0)  # pul-lint: disable=PUL107
+    """) == []
+
+
 def test_rule_catalog_is_complete():
     assert set(RULES) == {"PUL101", "PUL102", "PUL103", "PUL104", "PUL105",
-                          "PUL106"}
+                          "PUL106", "PUL107"}
 
 
 # ======================================================================== #

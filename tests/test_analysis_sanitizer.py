@@ -288,6 +288,66 @@ def test_restore_into_reserved_frame_is_collision():
     assert v.pid == 1 and "reserved frame 0" in v.message
 
 
+def test_cross_layer_frame_claims_do_not_collide():
+    """Per-layer plane identity: with the zero-copy layout a frame index
+    names a DIFFERENT buffer row per layer plane, so two pages claiming
+    frame 2 in layers 0 and 1 is legal — only a same-(layer, frame) claim
+    is a collision. A sanitizer keyed on frame alone would false-positive
+    on every fused-sweep serving trace."""
+    log = TraceLog()
+    log.emit(0, EventKind.ALLOC, pid=1, frame=2, refcount=1, layer=0)
+    log.emit(0, EventKind.ALLOC, pid=2, frame=2, refcount=1, layer=1)
+    assert check_page_trace(log) == []
+    # ...while the SAME plane double-claimed is still a collision
+    log.emit(1, EventKind.ALLOC, pid=3, frame=2, refcount=1, layer=1)
+    v = _only(check_page_trace(log), "frame-collision")
+    assert v.pid == 3 and "already backs hot page 2" in v.message
+
+
+def test_layer_claim_collides_with_whole_frame_owner():
+    """A layer=None claim owns the frame across every plane: a later
+    layer-scoped claim of the same frame must still collide."""
+    log = TraceLog()
+    log.emit(0, EventKind.ALLOC, pid=1, frame=2, refcount=1)    # whole frame
+    log.emit(0, EventKind.ALLOC, pid=2, frame=2, refcount=1, layer=3)
+    v = _only(check_page_trace(log), "frame-collision")
+    assert v.pid == 2
+
+
+def test_per_layer_write_rows_against_whole_frame_owner_clean():
+    """The fused sweep's commit shape: one whole-frame ALLOC, then a
+    WRITE_ROWS per layer plane into that frame. Each per-layer write must
+    resolve to the whole-frame owner, not flag write-to-non-hot-frame."""
+    log = TraceLog()
+    log.emit(0, EventKind.ALLOC, pid=1, frame=2, refcount=1)
+    for layer in range(3):
+        log.emit(1, EventKind.WRITE_ROWS, frames=(2,), layer=layer)
+    assert check_page_trace(log) == []
+
+
+def test_per_layer_write_rows_to_foreign_layer_flagged():
+    """A layer-scoped write into a frame owned only by OTHER planes is a
+    scatter into unbacked memory and must be flagged with its layer."""
+    log = TraceLog()
+    log.emit(0, EventKind.ALLOC, pid=1, frame=2, refcount=1, layer=0)
+    log.emit(1, EventKind.WRITE_ROWS, frames=(2,), layer=5)
+    v = _only(check_page_trace(log), "write-to-non-hot-frame")
+    assert "(layer 5)" in v.message
+
+
+def test_layer_scoped_release_keeps_other_planes_owned():
+    """Evicting one plane's claim must not release sibling planes."""
+    log = TraceLog()
+    log.emit(0, EventKind.ALLOC, pid=1, frame=2, refcount=1, layer=0)
+    log.emit(0, EventKind.ALLOC, pid=2, frame=2, refcount=1, layer=1)
+    log.emit(1, EventKind.EVICT, pid=1, frame=2)
+    log.emit(2, EventKind.WRITE_ROWS, frames=(2,), layer=1)     # still owned
+    assert check_page_trace(log) == []
+    log.emit(3, EventKind.WRITE_ROWS, frames=(2,), layer=0)     # released
+    v = _only(check_page_trace(log), "write-to-non-hot-frame")
+    assert "(layer 0)" in v.message
+
+
 # ======================================================================== #
 # incremental (shadow) checking
 # ======================================================================== #
